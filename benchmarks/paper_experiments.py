@@ -1,0 +1,157 @@
+"""Paper-experiment benchmarks: one function per paper table/figure.
+
+Default scale is CPU-friendly (the simulator is cycle-exact, so all
+RELATIVE effects — edge vs. snowball shapes, vicinity vs. random,
+per-increment growth — reproduce at reduced vertex counts).  Pass
+--scale=paper for the full 50K/1M-edge runs (minutes on CPU).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import EngineConfig, StreamingEngine
+from repro.core.energy import DEFAULT as ENERGY
+from repro.core.reference import bfs_levels
+from repro.graph.streams import StreamSpec, make_stream
+
+SCALES = {
+    "ci": dict(n_vertices=2000, n_edges=20_000),
+    "mid": dict(n_vertices=10_000, n_edges=100_000),
+    "paper": dict(n_vertices=50_000, n_edges=1_000_000),
+}
+
+
+def _engine(n_vertices: int, app: str, allocator="vicinity",
+            chunk=512, n_edges: int = 0) -> StreamingEngine:
+    # ghost capacity must cover the spilled edge blocks: ~E/edge_cap
+    # RPVO blocks across 1024 cells, x2 for placement skew (exhausting
+    # ghost slots livelocks the allocate forwarding chain — DESIGN §4.2)
+    ghosts = max(64, 2 * n_edges // (8 * 1024), 3 * n_vertices // 1024)
+    cfg = EngineConfig(height=32, width=32, n_vertices=n_vertices,
+                       edge_cap=8, ghost_slots=ghosts,
+                       queue_cap=64, chan_cap=16, futq_cap=16,
+                       io_stream_cap=2 ** 21, chunk=chunk,
+                       allocator=allocator)
+    eng = StreamingEngine(cfg, app)
+    if app != "ingest_only":
+        eng.seed(0, 0.0)
+    return eng
+
+
+_CACHE: dict = {}
+
+
+def run_stream(app: str, sampling: str, scale: str, allocator="vicinity",
+               verify=False):
+    key = (app, sampling, scale, allocator)
+    if key in _CACHE and not verify:
+        return _CACHE[key]
+    spec = StreamSpec(increments=10, sampling=sampling, seed=1,
+                      **SCALES[scale])
+    incs = make_stream(spec)
+    eng = _engine(spec.n_vertices, app, allocator, n_edges=spec.n_edges)
+    rows = []
+    for i, e in enumerate(incs):
+        r = eng.run_increment(e, max_cycles=2_000_000)
+        rows.append(dict(increment=i, edges=len(e), cycles=r.cycles,
+                         execs=r.execs, hops=r.hops, allocs=r.allocs,
+                         stalls=r.stalls,
+                         active=r.active_per_cycle))
+    if verify and app == "bfs":
+        want = bfs_levels(spec.n_vertices, np.concatenate(incs), 0)
+        got = eng.values(spec.n_vertices)
+        assert (got == want).all(), "BFS mismatch vs NetworkX"
+    _CACHE[key] = (rows, eng)
+    return rows, eng
+
+
+# ------------------- Fig 8/9: cycles per increment -------------------
+
+def bench_cycles_per_increment(scale="ci", sampling="edge"):
+    """Paper Fig. 8/9: per-increment cycles, ingestion-only vs +BFS."""
+    t0 = time.time()
+    ing, _ = run_stream("ingest_only", sampling, scale)
+    bfs, _ = run_stream("bfs", sampling, scale, verify=(scale == "ci"))
+    out = []
+    for a, b in zip(ing, bfs):
+        out.append(dict(increment=a["increment"], edges=a["edges"],
+                        ingest_cycles=a["cycles"],
+                        ingest_bfs_cycles=b["cycles"]))
+    return out, time.time() - t0
+
+
+# ------------------- Table 2: energy & time -------------------
+
+def bench_energy(scale="ci"):
+    """Paper Table 2 analogue: energy (uJ) + time (us) @ 1 GHz."""
+    rows = []
+    for sampling in ("edge", "snowball"):
+        for app, label in (("ingest_only", "Ingestion"),
+                           ("bfs", "Ingestion & BFS")):
+            data, eng = run_stream(app, sampling, scale)
+            cycles = sum(r["cycles"] for r in data)
+            hops = sum(r["hops"] for r in data)
+            execs = sum(r["execs"] for r in data)
+            allocs = sum(r["allocs"] for r in data)
+            injects = sum(r["edges"] for r in data)
+            rows.append(dict(
+                sampling=sampling, mode=label,
+                energy_uj=round(ENERGY.estimate_uj(
+                    hops=hops, execs=execs, allocs=allocs,
+                    injects=injects), 1),
+                time_us=round(ENERGY.cycles_to_us(cycles), 2),
+                cycles=cycles))
+    return rows
+
+
+# ------------------- Fig 5: allocator policies -------------------
+
+def bench_allocator(scale="ci"):
+    """Vicinity vs random ghost allocation: locality + cycle cost."""
+    rows = []
+    for alloc in ("vicinity", "random"):
+        data, eng = run_stream("bfs", "edge", scale, allocator=alloc)
+        stats = eng.ghost_chain_stats()
+        rows.append(dict(allocator=alloc,
+                         cycles=sum(r["cycles"] for r in data),
+                         hops=sum(r["hops"] for r in data),
+                         ghosts=stats["ghosts"],
+                         mean_ghost_hops=round(stats["mean_hops"], 2),
+                         max_ghost_hops=stats["max_hops"]))
+    return rows
+
+
+# ------------------- Fig 6/7: activation traces -------------------
+
+def bench_activation(scale="ci", sampling="edge", out_npz=None):
+    """Per-cycle active-cell counts (chip occupancy traces)."""
+    ing, _ = run_stream("ingest_only", sampling, scale)
+    bfs, _ = run_stream("bfs", sampling, scale)
+    trace_i = np.concatenate([r["active"] for r in ing])
+    trace_b = np.concatenate([r["active"] for r in bfs])
+    if out_npz:
+        np.savez(out_npz, ingest=trace_i, ingest_bfs=trace_b)
+    summarize = lambda t: dict(
+        cycles=len(t), mean_active=round(float(t.mean()), 1),
+        peak_active=int(t.max()),
+        mean_util_pct=round(100 * float(t.mean()) / 1024, 2))
+    return dict(ingest=summarize(trace_i), ingest_bfs=summarize(trace_b))
+
+
+# ------------------- engine wall-clock throughput -------------------
+
+def bench_engine_throughput(scale="ci"):
+    """Simulator performance (the §Perf hillclimb metric on CPU):
+    cell-cycles per wall second."""
+    spec = StreamSpec(increments=2, sampling="edge", seed=2, **SCALES[scale])
+    incs = make_stream(spec)
+    eng = _engine(spec.n_vertices, "bfs")
+    eng.run_increment(incs[0][:1000], max_cycles=20_000)  # warm the jit
+    t0 = time.time()
+    r = eng.run_increment(incs[1], max_cycles=2_000_000)
+    dt = time.time() - t0
+    return dict(cycles=r.cycles, wall_s=round(dt, 2),
+                cyc_per_s=round(r.cycles / dt, 1),
+                cell_cycles_per_s=round(r.cycles / dt * 1024, 0))

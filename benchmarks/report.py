@@ -1,0 +1,80 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.json.
+
+  PYTHONPATH=src python -m benchmarks.report [--json results/dryrun.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def fmt_bytes(b):
+    if b >= 1e9:
+        return f"{b/1e9:.1f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b/1e3:.0f}K"
+
+
+def dryrun_table(data, mesh):
+    lines = ["| arch | shape | lower(s) | compile(s) | arg GB/dev | "
+             "temp GB/dev | collective ops |",
+             "|---|---|---|---|---|---|---|"]
+    for key in sorted(data):
+        r = data[key]
+        if r["mesh"] != mesh:
+            continue
+        if not r.get("ok"):
+            lines.append(f'| {r["arch"]} | {r["shape"]} | — | — | — | — | '
+                         f'FAILED: {r.get("error", "")[:60]} |')
+            continue
+        c = r.get("collectives", {}).get("counts", {})
+        cs = " ".join(f"{k.split('-')[-1][:4]}:{v}"
+                      for k, v in c.items() if v)
+        lines.append(
+            f'| {r["arch"]} | {r["shape"]} | {r.get("lower_s", 0):.0f} | '
+            f'{r.get("compile_s", 0):.0f} | '
+            f'{r["mem"]["argument_gb"]:.2f} | {r["mem"]["temp_gb"]:.2f} | '
+            f'{cs} |')
+    return "\n".join(lines)
+
+
+def roofline_table(data):
+    lines = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+             "dominant | MODEL/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for key in sorted(data):
+        r = data[key]
+        if r["mesh"] != "single" or not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        ur = r.get("useful_ratio")
+        lines.append(
+            f'| {r["arch"]} | {r["shape"]} | {rf["t_compute"]:.4f} | '
+            f'{rf["t_memory"]:.4f} | {rf["t_collective"]:.4f} | '
+            f'{rf["dominant"]} | '
+            f'{"—" if ur is None else f"{ur:.2f}"} | '
+            f'{rf["roofline_fraction"]:.3f} |')
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline"])
+    args = ap.parse_args()
+    data = json.loads(pathlib.Path(args.json).read_text())
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run — single pod (16x16 = 256 chips)\n")
+        print(dryrun_table(data, "single"))
+        print("\n### Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+        print(dryrun_table(data, "multi"))
+    if args.section in ("all", "roofline"):
+        print("\n### Roofline (single pod, per device)\n")
+        print(roofline_table(data))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Benchmark harness: one entry per paper table/figure + kernel micros
++ the roofline table.  Prints ``name,value,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale ci|mid|paper] [--only X]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+
+def _csv(name, *fields):
+    print(",".join([name] + [str(f) for f in fields]), flush=True)
+
+
+def bench_paper(scale: str, only=None) -> None:
+    from benchmarks import paper_experiments as pe
+
+    if only in (None, "increments"):
+        for sampling in ("edge", "snowball"):
+            rows, wall = pe.bench_cycles_per_increment(scale, sampling)
+            for r in rows:
+                _csv(f"fig8_9/{sampling}", f'inc{r["increment"]}',
+                     f'edges={r["edges"]}',
+                     f'ingest_cycles={r["ingest_cycles"]}',
+                     f'ingest_bfs_cycles={r["ingest_bfs_cycles"]}')
+    if only in (None, "energy"):
+        for r in pe.bench_energy(scale):
+            _csv("table2", r["sampling"], r["mode"],
+                 f'energy_uj={r["energy_uj"]}', f'time_us={r["time_us"]}')
+    if only in (None, "allocator"):
+        for r in pe.bench_allocator(scale):
+            _csv("fig5_allocator", r["allocator"],
+                 f'cycles={r["cycles"]}', f'hops={r["hops"]}',
+                 f'ghosts={r["ghosts"]}',
+                 f'mean_ghost_hops={r["mean_ghost_hops"]}',
+                 f'max_ghost_hops={r["max_ghost_hops"]}')
+    if only in (None, "activation"):
+        act = pe.bench_activation(scale, "edge",
+                                  out_npz="results/activation_edge.npz")
+        for mode, s in act.items():
+            _csv("fig6_7_activation", mode, f'cycles={s["cycles"]}',
+                 f'mean_active={s["mean_active"]}',
+                 f'peak={s["peak_active"]}',
+                 f'util_pct={s["mean_util_pct"]}')
+    if only in (None, "throughput"):
+        t = pe.bench_engine_throughput(scale)
+        _csv("engine_throughput", f'cycles={t["cycles"]}',
+             f'wall_s={t["wall_s"]}',
+             f'cell_cycles_per_s={t["cell_cycles_per_s"]}')
+
+
+def bench_kernels() -> None:
+    import jax
+    import numpy as np
+    from repro.kernels.embedding_bag.ops import embedding_bag
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.spmm.ops import spmm_sorted_coo
+
+    def timeit(f, *a, n=3, **kw):
+        f(*a, **kw)  # compile
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(f(*a, **kw))
+        return (time.time() - t0) / n * 1e6
+
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (1, 256, 4, 64))
+    kk = jax.random.normal(k, (1, 256, 2, 64))
+    us = timeit(flash_attention, q, kk, kk, interpret=True)
+    _csv("kernel/flash_attention", f"{us:.0f}us",
+         "interpret-mode (CPU); deploy target TPU")
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((512, 64), dtype=np.float32)
+    src = rng.integers(0, 512, 4096).astype(np.int32)
+    dst = np.sort(rng.integers(0, 512, 4096).astype(np.int32))
+    us = timeit(spmm_sorted_coo, x, src, dst, 512, interpret=True)
+    _csv("kernel/spmm_onehot_mxu", f"{us:.0f}us", "interpret-mode")
+    tbl = rng.standard_normal((4096, 64), dtype=np.float32)
+    idx = rng.integers(0, 4096, (64, 4)).astype(np.int32)
+    us = timeit(embedding_bag, tbl, idx, interpret=True)
+    _csv("kernel/embedding_bag", f"{us:.0f}us", "interpret-mode")
+
+
+def bench_roofline(path="results/dryrun.json") -> None:
+    p = pathlib.Path(path)
+    if not p.exists():
+        _csv("roofline", "SKIPPED", f"{path} missing - run dryrun first")
+        return
+    data = json.loads(p.read_text())
+    for key, r in sorted(data.items()):
+        if not r.get("ok"):
+            _csv("roofline", key, "FAILED", r.get("error", "")[:80])
+            continue
+        rf = r.get("roofline", {})
+        _csv("roofline", key,
+             f't_comp={rf.get("t_compute", 0):.4f}s',
+             f't_mem={rf.get("t_memory", 0):.4f}s',
+             f't_coll={rf.get("t_collective", 0):.4f}s',
+             f'dominant={rf.get("dominant")}',
+             f'frac={rf.get("roofline_fraction", 0):.3f}')
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="ci",
+                    choices=["ci", "mid", "paper"])
+    ap.add_argument("--only", default=None,
+                    help="increments|energy|allocator|activation|"
+                         "throughput|kernels|roofline")
+    args = ap.parse_args()
+    pathlib.Path("results").mkdir(exist_ok=True)
+    print("benchmark,fields...", flush=True)
+    if args.only in (None, "kernels"):
+        bench_kernels()
+    if args.only in (None, "roofline"):
+        bench_roofline()
+    if args.only is None or args.only not in ("kernels", "roofline"):
+        bench_paper(args.scale, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""--arch arctic-480b (exact published config; see lm_archs.py)."""
+from repro.configs.lm_archs import ARCTIC as CONFIG
+from repro.configs.registry import get
+
+BUNDLE = get("arctic-480b")
+SHAPES = {s.name: s for s in BUNDLE.shapes}
+smoke = BUNDLE.smoke

@@ -1,0 +1,7 @@
+"""--arch dlrm-rm2 (exact published config; see recsys_archs.py)."""
+from repro.configs.recsys_archs import DLRM_RM2 as CONFIG
+from repro.configs.registry import get
+
+BUNDLE = get("dlrm-rm2")
+SHAPES = {s.name: s for s in BUNDLE.shapes}
+smoke = BUNDLE.smoke

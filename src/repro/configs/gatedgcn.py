@@ -1,0 +1,7 @@
+"""--arch gatedgcn (exact published config; see gnn_archs.py)."""
+from repro.configs.gnn_archs import GATEDGCN as CONFIG
+from repro.configs.registry import get
+
+BUNDLE = get("gatedgcn")
+SHAPES = {s.name: s for s in BUNDLE.shapes}
+smoke = BUNDLE.smoke

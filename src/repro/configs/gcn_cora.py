@@ -1,0 +1,7 @@
+"""--arch gcn-cora (exact published config; see gnn_archs.py)."""
+from repro.configs.gnn_archs import GCN_CORA as CONFIG
+from repro.configs.registry import get
+
+BUNDLE = get("gcn-cora")
+SHAPES = {s.name: s for s in BUNDLE.shapes}
+smoke = BUNDLE.smoke

@@ -1,0 +1,7 @@
+"""--arch phi3.5-moe-42b-a6.6b (exact published config; see lm_archs.py)."""
+from repro.configs.lm_archs import PHI35_MOE as CONFIG
+from repro.configs.registry import get
+
+BUNDLE = get("phi3.5-moe-42b-a6.6b")
+SHAPES = {s.name: s for s in BUNDLE.shapes}
+smoke = BUNDLE.smoke

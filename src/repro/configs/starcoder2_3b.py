@@ -1,0 +1,7 @@
+"""--arch starcoder2-3b (exact published config; see lm_archs.py)."""
+from repro.configs.lm_archs import STARCODER2_3B as CONFIG
+from repro.configs.registry import get
+
+BUNDLE = get("starcoder2-3b")
+SHAPES = {s.name: s for s in BUNDLE.shapes}
+smoke = BUNDLE.smoke

@@ -1,0 +1,50 @@
+"""Ghost-vertex allocation policies (paper Fig. 5).
+
+The *vicinity allocator* keeps ghost vertices within ``vicinity_hops``
+(default 2, per the paper) of the requesting cell, minimizing intra-vertex
+(root <-> ghost chain) operation latency.  The *random allocator* disperses
+them uniformly.  Target choice happens at the requesting cell when it
+stages the ``allocate`` system action; a rotating per-cell counter makes the
+choice deterministic yet spread out.  If the chosen cell is full, its
+``allocate`` handler forwards the request to the next cell (linear probe).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.config import EngineConfig
+
+
+def vicinity_offsets(hops: int) -> np.ndarray:
+    """(dy, dx) ring offsets with Chebyshev distance in [1, hops]."""
+    offs = [(dy, dx)
+            for dy in range(-hops, hops + 1)
+            for dx in range(-hops, hops + 1)
+            if max(abs(dy), abs(dx)) >= 1]
+    # sort nearest-first so rotation prefers 1-hop neighbours
+    offs.sort(key=lambda p: (max(abs(p[0]), abs(p[1])), p))
+    return np.asarray(offs, np.int32)
+
+
+def choose_alloc_cell(cfg: EngineConfig, rows, cols, arot):
+    """Vectorized target-cell choice.  rows/cols/arot: [H,W] int32.
+
+    Returns [H,W] flat cell ids.
+    """
+    H, W = cfg.height, cfg.width
+    if cfg.allocator == "random":
+        # splitmix-style integer hash of (cell, rotation) -> uniform cell
+        x = (rows * W + cols).astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+        x = x + arot.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
+        x ^= x >> 16
+        x = x * jnp.uint32(0xC2B2AE35)
+        x ^= x >> 13
+        return (x % jnp.uint32(cfg.n_cells)).astype(jnp.int32)
+    offs = jnp.asarray(vicinity_offsets(cfg.vicinity_hops))  # [K,2]
+    k = arot % offs.shape[0]
+    dy = offs[k, 0]
+    dx = offs[k, 1]
+    r = jnp.clip(rows + dy, 0, H - 1)
+    c = jnp.clip(cols + dx, 0, W - 1)
+    return r * W + c

@@ -1,0 +1,74 @@
+"""Diffusion applications (the paper's `bfs-action`, plus future-work algs).
+
+An app plugs into the generic ``OP_APP`` action.  All bundled apps follow a
+*monotone relaxation* pattern so streaming updates never recompute from
+scratch (the paper's central claim for dynamic BFS):
+
+  relax(vals, incoming) -> (new_vals, changed)   # executed at the target
+  edge_value(src_val, w)                          # value diffused along an edge
+  propagate_on_insert(vals)                       # Listing 4 line 7 condition
+
+``forward`` down the ghost chain always carries the slot's post-relax value
+itself (same logical vertex, same value) — DESIGN §4.4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+INF = jnp.float32(1e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionApp:
+    name: str
+    # (vals[VN], incoming scalar) -> (new vals[VN], changed bool)
+    relax: Callable
+    # (emit source value scalar, edge weight scalar) -> scalar
+    edge_value: Callable
+    # vals[VN] -> bool : propagate on edge-insert? (Listing 4, line 7)
+    propagate_on_insert: Callable
+    init_val: float = 1e9
+    n_vals: int = 1
+
+
+def _min_relax(vals, incoming):
+    new0 = jnp.minimum(vals[..., 0], incoming)
+    changed = incoming < vals[..., 0]
+    return vals.at[..., 0].set(new0), changed
+
+
+BFS = DiffusionApp(
+    name="bfs",
+    relax=_min_relax,
+    edge_value=lambda v, w: v + 1.0,
+    propagate_on_insert=lambda vals: vals[..., 0] < INF,
+)
+
+SSSP = DiffusionApp(
+    name="sssp",
+    relax=_min_relax,
+    edge_value=lambda v, w: v + w,
+    propagate_on_insert=lambda vals: vals[..., 0] < INF,
+)
+
+# Connected components by min-label propagation (undirected streams).
+CC = DiffusionApp(
+    name="cc",
+    relax=_min_relax,
+    edge_value=lambda v, w: v,
+    propagate_on_insert=lambda vals: vals[..., 0] < INF,
+)
+
+# Ingestion-only mode: the paper's separate experiment with bfs-action
+# propagation disabled (§5) to isolate streaming-insert time.
+INGEST_ONLY = DiffusionApp(
+    name="ingest_only",
+    relax=lambda vals, incoming: (vals, jnp.zeros(vals.shape[:-1], bool)),
+    edge_value=lambda v, w: v,
+    propagate_on_insert=lambda vals: jnp.zeros(vals.shape[:-1], bool),
+)
+
+APPS = {a.name: a for a in (BFS, SSSP, CC, INGEST_ONLY)}

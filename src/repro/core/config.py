@@ -1,0 +1,80 @@
+"""Engine configuration for the AM-CCA-style message-driven machine.
+
+The paper simulates a 32x32 chip of Compute Cells (CCs), each with local
+memory (vertex slots), an action queue, and four mesh links (N/S/E/W) with
+one-hop-per-cycle YX dimension-ordered routing.  All capacities below are
+static so the whole machine state is a fixed-shape JAX pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    # --- chip geometry (paper: 32x32) ---
+    height: int = 32
+    width: int = 32
+
+    # --- RPVO storage ---
+    n_vertices: int = 1024        # logical vertices (roots, round-robin placed)
+    edge_cap: int = 8             # edges per RPVO node before spilling to ghost
+    ghost_slots: int = 64         # ghost slots per cell (beyond root slots)
+
+    # --- queues / buffers ---
+    queue_cap: int = 32           # per-cell action queue
+    chan_cap: int = 8             # per-cell per-direction outgoing channel
+    futq_cap: int = 8             # per-future deferred-task queue (Fig. 4)
+
+    # --- IO channels (paper: IO cells stream edges, 1 edge/cycle each) ---
+    n_io_cells: int = 0           # 0 -> one per column (paper-style)
+    io_stream_cap: int = 4096     # per-IO-cell residual stream capacity
+
+    # --- allocation policy (paper Fig. 5) ---
+    allocator: str = "vicinity"   # "vicinity" (<=2 hops) | "random"
+    vicinity_hops: int = 2
+
+    # --- app ---
+    n_vals: int = 1               # per-slot application values (BFS: level)
+
+    # --- engine ---
+    max_cycles: int = 1_000_000
+    chunk: int = 256              # cycles per jitted scan chunk
+
+    @property
+    def n_cells(self) -> int:
+        return self.height * self.width
+
+    @property
+    def root_slots(self) -> int:
+        return int(math.ceil(self.n_vertices / self.n_cells))
+
+    @property
+    def slots(self) -> int:
+        return self.root_slots + self.ghost_slots
+
+    @property
+    def io_cells(self) -> int:
+        return self.n_io_cells if self.n_io_cells > 0 else self.width
+
+    @property
+    def aq_reserve(self) -> int:
+        # Reserved action-queue slots so the active action's *local*
+        # emissions always complete -> no self-deadlock (see DESIGN 4.2).
+        return self.edge_cap + 2
+
+    @property
+    def sys_reserve(self) -> int:
+        # System actions (allocate / set-future) may fill the queue this
+        # much further than application messages: combined with head
+        # rotation this guarantees the future-LCO protocol always makes
+        # progress under congestion (no FIFO head-of-line deadlock).
+        return 2
+
+    def validate(self) -> None:
+        assert self.height >= 2 and self.width >= 2
+        assert self.queue_cap > self.aq_reserve + self.sys_reserve + 1, \
+            "queue too small for reserves"
+        assert self.n_cells * self.slots < 2**31, "address overflows int32"
+        assert self.edge_cap >= 1 and self.futq_cap >= 2

@@ -1,0 +1,224 @@
+"""The cycle engine: composes routing, execution and ingestion into one
+pure ``state -> state`` step, runs it to quiescence, and exposes the
+streaming-increment API used by the experiments.
+
+Cycle order (all fixed-shape, fully vectorized over the cell grid):
+
+  1. hop_stage      channel heads advance one link (YX DOR, backpressure)
+  2. staging        active actions stage one ``propagate`` message
+  3. phase0         idle cells pop one action and run its compute step
+  4. io_stage       IO cells inject the next streamed edge
+
+Quiescence (the paper's Terminator object): no queued actions, no channel
+occupancy, no active action, no deferred future tasks, no pending IO.
+On a real pod this is a tree all-reduce of the pending counters; here it is
+literally ``jnp.sum`` inside the jitted step — GSPMD lowers it to
+``all-reduce`` when the grid is sharded (see the dry-run HLO).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.apps import APPS, DiffusionApp
+from repro.core.config import EngineConfig
+from repro.core.exec_stage import phase0_stage, staging_stage
+from repro.core.ingest import io_stage, load_stream
+from repro.core.routing import hop_stage
+from repro.core.state import (MachineState, init_state, root_addr,
+                              self_cell_grid)
+
+
+class CycleStats(NamedTuple):
+    active: jax.Array      # cells doing compute/staging work this cycle
+    in_flight: jax.Array   # messages sitting in channels
+    backlog: jax.Array     # queued actions
+    hops: jax.Array        # link traversals this cycle
+    quiescent: jax.Array   # bool
+
+
+def _rc(cfg: EngineConfig):
+    rows = jnp.arange(cfg.height, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(cfg.width, dtype=jnp.int32)[None, :]
+    return (jnp.broadcast_to(rows, (cfg.height, cfg.width)),
+            jnp.broadcast_to(cols, (cfg.height, cfg.width)))
+
+
+def quiescent(st: MachineState) -> jax.Array:
+    return ((jnp.sum(st.aq_n) == 0) & (jnp.sum(st.ch_n) == 0)
+            & ~jnp.any(st.cvalid) & (jnp.sum(st.fq_n) == 0)
+            & ~jnp.any(st.fwd_pending)
+            & (jnp.sum(st.io_n - st.io_pos) == 0))
+
+
+def cycle_step(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
+    rows, cols = _rc(cfg)
+    busy0 = st.cvalid
+    st, hops = hop_stage(cfg, st, rows, cols)
+    st, active_a = staging_stage(cfg, app, st, rows, cols)
+    st, popped = phase0_stage(cfg, app, st, rows, cols, busy0)
+    st = io_stage(cfg, st, rows, cols)
+    st = st._replace(cycle=st.cycle + 1,
+                     stat_hops=st.stat_hops + hops)
+    stats = CycleStats(
+        active=jnp.sum((active_a | popped).astype(jnp.int32)),
+        in_flight=jnp.sum(st.ch_n), backlog=jnp.sum(st.aq_n),
+        hops=hops, quiescent=quiescent(st))
+    return st, stats
+
+
+def run_chunk_body(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
+    """Un-jitted fixed-length chunk (dry-run / roofline entry point: the
+    caller jits this with the production-mesh shardings)."""
+    def body(s, _):
+        s2, _ = cycle_step(cfg, app, s)
+        return s2, None
+    st, _ = jax.lax.scan(body, st, None, length=cfg.chunk)
+    return st
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=2)
+def run_chunk(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
+    """Scan `cfg.chunk` cycles; freeze once quiescent (identity cycles)."""
+    def body(s, _):
+        done = quiescent(s)
+        s2, stats = cycle_step(cfg, app, s)
+        s = jax.tree.map(lambda a, b: jnp.where(done, a, b), s, s2)
+        return s, stats
+    return jax.lax.scan(body, st, None, length=cfg.chunk)
+
+
+def run_to_quiescence_while(cfg: EngineConfig, app: DiffusionApp,
+                            st: MachineState, max_cycles=None):
+    """Pure lax.while_loop runner (no traces) — the dry-run/roofline path."""
+    mc = jnp.int32(max_cycles or cfg.max_cycles)
+    start = st.cycle
+
+    def cond(s):
+        return (~quiescent(s)) & (s.cycle - start < mc)
+
+    def body(s):
+        s2, _ = cycle_step(cfg, app, s)
+        return s2
+
+    return jax.lax.while_loop(cond, body, st)
+
+
+@dataclasses.dataclass
+class IncrementResult:
+    cycles: int
+    active_per_cycle: np.ndarray
+    in_flight_per_cycle: np.ndarray
+    hops: int
+    execs: int
+    stalls: int
+    allocs: int
+
+
+class StreamingEngine:
+    """Host-side driver: the accelerator-style main() of paper Listing 1."""
+
+    def __init__(self, cfg: EngineConfig, app: str | DiffusionApp = "bfs"):
+        self.cfg = cfg
+        self.app = APPS[app] if isinstance(app, str) else app
+        cfg = dataclasses.replace(cfg, n_vals=self.app.n_vals)
+        self.cfg = cfg
+        self.state = init_state(cfg, init_vals=self.app.init_val)
+        self.total_cycles = 0
+        self.totals = dict(hops=0, execs=0, stalls=0, allocs=0)
+
+    # -- seeding (e.g. the BFS source vertex gets level 0 pre-stream) --
+    def seed(self, vid: int, value: float, val_idx: int = 0):
+        cfg = self.cfg
+        cell = vid % cfg.n_cells
+        r, c, s = cell // cfg.width, cell % cfg.width, vid // cfg.n_cells
+        self.state = self.state._replace(
+            vals=self.state.vals.at[r, c, s, val_idx].set(value))
+
+    # -- stream one increment of edges and run to quiescence --
+    def run_increment(self, edges: np.ndarray,
+                      max_cycles: int | None = None) -> IncrementResult:
+        cfg = self.cfg
+        self.state = load_stream(cfg, self.state, edges)
+        act, flt = [], []
+        hops = execs = stalls = allocs = 0
+        cycles = 0
+        limit = max_cycles or cfg.max_cycles
+        zero_stats = self.state._replace(stat_hops=jnp.int32(0),
+                                         stat_exec=jnp.int32(0),
+                                         stat_stall=jnp.int32(0),
+                                         stat_allocs=jnp.int32(0))
+        self.state = zero_stats
+        last_exec, no_progress = 0, 0
+        while cycles < limit:
+            self.state, stats = run_chunk(cfg, self.app, self.state)
+            q = np.asarray(stats.quiescent)
+            a = np.asarray(stats.active)
+            f = np.asarray(stats.in_flight)
+            if q.any():
+                n = int(np.argmax(q))  # first quiescent cycle in chunk
+                act.append(a[:n]); flt.append(f[:n])
+                cycles += n
+                break
+            act.append(a); flt.append(f)
+            cycles += cfg.chunk
+            # Message-dependent-deadlock detector: YX DOR keeps the
+            # NETWORK acyclic, but the execute stage (pop -> emit ->
+            # channel) can close a protocol cycle when buffers are sized
+            # below the workload's dependency depth.  Fail loudly with
+            # sizing advice instead of silently dropping work.
+            e = int(self.state.stat_exec)
+            no_progress = no_progress + 1 if e == last_exec else 0
+            last_exec = e
+            if no_progress >= 8:
+                raise RuntimeError(
+                    "engine livelock: no action executed for "
+                    f"{8 * cfg.chunk} cycles with work pending. "
+                    "Increase chan_cap (>=4) and/or queue_cap "
+                    f"(>= aq_reserve+sys_reserve+8 = "
+                    f"{cfg.aq_reserve + cfg.sys_reserve + 8}) — see "
+                    "DESIGN.md §4.2 buffer-sizing rule.")
+        hops = int(self.state.stat_hops)
+        execs = int(self.state.stat_exec)
+        stalls = int(self.state.stat_stall)
+        allocs = int(self.state.stat_allocs)
+        self.total_cycles += cycles
+        for k, v in zip(("hops", "execs", "stalls", "allocs"),
+                        (hops, execs, stalls, allocs)):
+            self.totals[k] += v
+        return IncrementResult(
+            cycles=cycles,
+            active_per_cycle=np.concatenate(act) if act else np.zeros(0, np.int32),
+            in_flight_per_cycle=np.concatenate(flt) if flt else np.zeros(0, np.int32),
+            hops=hops, execs=execs, stalls=stalls, allocs=allocs)
+
+    # -- read back application values from RPVO roots --
+    def values(self, n: int | None = None, val_idx: int = 0) -> np.ndarray:
+        cfg = self.cfg
+        n = n or cfg.n_vertices
+        vids = jnp.arange(n, dtype=jnp.int32)
+        cell = vids % cfg.n_cells
+        r, c, s = cell // cfg.width, cell % cfg.width, vids // cfg.n_cells
+        return np.asarray(self.state.vals[r, c, s, val_idx])
+
+    def ghost_chain_stats(self) -> dict:
+        """Diagnostics: ghost usage + locality (validates Fig. 5 policies)."""
+        cfg = self.cfg
+        st = self.state
+        gs = np.asarray(st.gstate)
+        ga = np.asarray(st.gaddr)
+        used = int(np.sum(np.asarray(st.nfree) - cfg.root_slots))
+        have = gs == 2
+        if not have.any():
+            return dict(ghosts=used, mean_hops=0.0, max_hops=0)
+        rr, cc, _ = np.nonzero(have)
+        tgt_cell = ga[have] // cfg.slots
+        tr, tc = tgt_cell // cfg.width, tgt_cell % cfg.width
+        d = np.abs(rr - tr) + np.abs(cc - tc)
+        return dict(ghosts=used, mean_hops=float(d.mean()),
+                    max_hops=int(d.max()))

@@ -1,0 +1,317 @@
+"""Action execution: the diffusive programming model's compute stage.
+
+AM-CCA executes **one operation per cell per cycle**: either a computing
+instruction (the action body) or the creation/staging of one new message
+via ``propagate`` (paper §4).  We model this faithfully with per-cell
+active-action registers: an action occupies its cell for ``1 + T`` cycles —
+one mutate cycle (phase 0) plus one cycle per emission, with backpressure
+stalls when the target buffer is full.
+
+Handlers implemented (paper Listings 4-6 + system actions of Fig. 3/4):
+
+  OP_INSERT_EDGE  insert-edge-action with the full ghost/future protocol
+  OP_APP          the application action (bfs-action et al.)
+  OP_ALLOC        remote ghost allocation (vicinity/random allocator)
+  OP_SET_FUTURE   continuation return: set future, drain deferred queue
+
+Implementation note (§Perf, cca cell): every slot access is a one-hot
+``where`` over the slot axis — never a scatter/gather with index arrays —
+so GSPMD partitions each cycle over the sharded cell grid with zero
+collectives beyond the routing permutes and the quiescence all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rings
+from repro.core.alloc import choose_alloc_cell
+from repro.core.apps import DiffusionApp
+from repro.core.config import EngineConfig
+from repro.core.msg import (MSG_WORDS, OP_ALLOC, OP_APP, OP_INSERT_EDGE,
+                            OP_SET_FUTURE, TB_AQ_SELF, f2i, i2f, make_msg)
+from repro.core.routing import yx_target_buffer
+from repro.core.state import G_NULL, G_PENDING, G_SET, MachineState
+
+
+def _oh(idx, n, mask=None):
+    """One-hot [..., n] selector; optionally masked."""
+    oh = jnp.arange(n, dtype=jnp.int32) == idx[..., None]
+    if mask is not None:
+        oh = oh & mask[..., None]
+    return oh
+
+
+def _expand(oh, arr):
+    """Reshape a [H,W,S] selector to broadcast against arr [H,W,S,...]."""
+    return oh.reshape(oh.shape + (1,) * (arr.ndim - oh.ndim))
+
+
+def sel(arr, slot):
+    """arr[II, JJ, slot] as one-hot reduce.  arr: [H,W,S,...] -> [H,W,...]."""
+    oh = _expand(_oh(slot, arr.shape[2]), arr)
+    if arr.dtype == jnp.bool_:
+        return jnp.any(oh & arr, axis=2)
+    return jnp.sum(jnp.where(oh, arr, 0), axis=2).astype(arr.dtype)
+
+
+def put(arr, slot, val, mask):
+    """arr[II, JJ, slot] = val where mask.  val: [H,W,...] or scalar."""
+    oh = _expand(_oh(slot, arr.shape[2], mask), arr)
+    val = jnp.asarray(val, arr.dtype)
+    if val.ndim >= 2 and val.shape[:2] == arr.shape[:2]:
+        val = jnp.expand_dims(val, 2)
+    return jnp.where(oh, val, arr)
+
+
+# --------------------------------------------------------------------------
+# EXEC-A: staging — the active action emits its next message (1 per cycle)
+# --------------------------------------------------------------------------
+
+def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
+                  rows, cols):
+    H, W, S, E = cfg.height, cfg.width, cfg.slots, cfg.edge_cap
+    active = st.cvalid & (st.cphase >= 1) & (st.cphase <= st.cT)
+
+    op = st.cmsg[..., 0]
+    dst = st.cmsg[..., 1]
+    slot = dst % S
+    k = st.cphase - 1  # emission index
+
+    is_app = op == OP_APP
+    is_sf = op == OP_SET_FUTURE
+
+    # ---- emission for OP_APP: per-edge diffusion, then ghost forward ----
+    ne = sel(st.nedges, slot)
+    ek = jnp.minimum(k, E - 1)
+    ohSE = (_oh(slot, S)[..., None] & _oh(ek, E)[..., None, :])  # [H,W,S,E]
+    e_dst = jnp.sum(jnp.where(ohSE, st.edst, 0), axis=(2, 3))
+    e_w = jnp.sum(jnp.where(ohSE, st.ew, 0.0), axis=(2, 3))
+    app_edge_msg = make_msg(OP_APP, e_dst, f2i(app.edge_value(st.cemit, e_w)))
+    gs = sel(st.gstate, slot)
+    ga = sel(st.gaddr, slot)
+    app_fwd_msg = make_msg(OP_APP, ga, f2i(st.cemit))
+    app_is_fwd = is_app & (k >= ne)
+    app_msg = jnp.where(app_is_fwd[..., None], app_fwd_msg, app_edge_msg)
+
+    # ---- emission for OP_SET_FUTURE: retarget head of the future queue,
+    #      then (last) the coalesced deferred app-forward, if any ----
+    fqn_cur = sel(st.fq_n, slot)
+    fqh_cur = sel(st.fq_head, slot)
+    fq_slot = jnp.sum(jnp.where(_expand(_oh(slot, S), st.fq), st.fq, 0),
+                      axis=2)                                # [H,W,FQ,3]
+    fq_e = rings.ring_peek(fq_slot, fqh_cur)                 # [H,W,3]
+    sf_is_ins = fq_e[..., 0] == OP_INSERT_EDGE
+    sf_fq_msg = jnp.where(
+        sf_is_ins[..., None],
+        make_msg(OP_INSERT_EDGE, ga, fq_e[..., 1], fq_e[..., 2]),
+        make_msg(OP_APP, ga, fq_e[..., 1]))
+    sf_from_fq = is_sf & (fqn_cur > 0)
+    sf_from_fwd = is_sf & (fqn_cur == 0)   # the coalesced forward
+    fwd_here = sel(st.fwd_val, slot)
+    sf_msg = jnp.where(sf_from_fq[..., None], sf_fq_msg,
+                       make_msg(OP_APP, ga, f2i(fwd_here)))
+
+    emis = jnp.where(is_app[..., None], app_msg,
+                     jnp.where(is_sf[..., None], sf_msg, st.cout))
+
+    # ---- app ghost-forward onto a *pending* future: coalesce into the
+    #      per-slot monotone forward register (never stalls — the future
+    #      LCO merges dependent continuations, DESIGN §4.4) ----
+    to_reg = active & app_is_fwd & (gs == G_PENDING)
+    ohreg = _oh(slot, S, to_reg)
+    fwd_val = jnp.where(ohreg, jnp.minimum(st.fwd_val, st.cemit[..., None]),
+                        st.fwd_val)
+    fwd_pending = st.fwd_pending | ohreg
+
+    tb = yx_target_buffer(cfg, emis[..., 1] // S, rows, cols)
+
+    # ---- try to push (network or local queue) ----
+    aq, aq_n = st.aq, st.aq_n
+    ch, ch_n = st.ch, st.ch_n
+
+    push_active = active & ~to_reg
+    ok_total = to_reg  # register writes always succeed
+    # local delivery (uses the reserved slots -> never self-deadlocks)
+    want = push_active & (tb == TB_AQ_SELF)
+    ok = want & rings.ring_free(aq_n, cfg.queue_cap)
+    aq, aq_n = rings.ring_push(aq, aq_n, st.aq_head, emis, ok)
+    ok_total |= ok
+    # outgoing channels
+    for d in range(4):
+        want = push_active & (tb == d)
+        ok = want & rings.ring_free(ch_n[:, :, d], cfg.chan_cap)
+        nb, nn = rings.ring_push(ch[:, :, d], ch_n[:, :, d],
+                                 st.ch_head[:, :, d], emis, ok)
+        ch = ch.at[:, :, d].set(nb)
+        ch_n = ch_n.at[:, :, d].set(nn)
+        ok_total |= ok
+
+    # ---- SET_FUTURE bookkeeping on successful stages ----
+    sf_pop = ok_total & sf_from_fq
+    n2, h2 = rings.ring_pop(fqn_cur, fqh_cur, cfg.futq_cap, sf_pop)
+    fq_n = put(st.fq_n, slot, n2, sf_pop)
+    fq_head = put(st.fq_head, slot, h2, sf_pop)
+    sf_clear = ok_total & sf_from_fwd
+    fwd_val = put(fwd_val, slot, jnp.float32(1e9), sf_clear)
+    fwd_pending = fwd_pending & ~_oh(slot, S, sf_clear)
+
+    # ---- advance / retire ----
+    new_phase = st.cphase + ok_total.astype(jnp.int32)
+    done = active & ok_total & (new_phase > st.cT)
+    cvalid = st.cvalid & ~done
+    stall = active & ~ok_total
+
+    st = st._replace(
+        aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n, fq_n=fq_n, fq_head=fq_head,
+        fwd_val=fwd_val, fwd_pending=fwd_pending,
+        cphase=new_phase, cvalid=cvalid,
+        stat_exec=st.stat_exec + jnp.sum(done.astype(jnp.int32)),
+        stat_stall=st.stat_stall + jnp.sum(stall.astype(jnp.int32)))
+    return st, active
+
+
+# --------------------------------------------------------------------------
+# EXEC-B: pop + phase 0 (the action's computing instruction)
+# --------------------------------------------------------------------------
+
+def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
+                 rows, cols, busy_at_start):
+    H, W, S, E = cfg.height, cfg.width, cfg.slots, cfg.edge_cap
+    FQ, Q = cfg.futq_cap, cfg.queue_cap
+    cellid = rows * W + cols
+
+    idle = ~busy_at_start
+    has = idle & (st.aq_n > 0)
+    m = rings.ring_peek(st.aq, st.aq_head)  # [H,W,MSG]
+    op = jnp.where(has, m[..., 0], 0)
+    dst, a0, a1 = m[..., 1], m[..., 2], m[..., 3]
+    slot = dst % S
+
+    vals_s = sel(st.vals, slot)             # [H,W,VN]
+    ne = sel(st.nedges, slot)
+    gs = sel(st.gstate, slot)
+    fqn = sel(st.fq_n, slot)
+
+    is_ins = op == OP_INSERT_EDGE
+    is_app = op == OP_APP
+    is_alc = op == OP_ALLOC
+    is_sf = op == OP_SET_FUTURE
+
+    # ---------------- INSERT-EDGE paths (Listing 6) ----------------
+    room = ne < E
+    p_room = is_ins & room
+    p_fwd = is_ins & ~room & (gs == G_SET)
+    p_defer = is_ins & ~room & (gs == G_PENDING)
+    p_null = is_ins & ~room & (gs == G_NULL)
+
+    # the only infeasible phase-0: deferred insert with a full future
+    # queue.  The head is ROTATED to the queue tail (costs this cell's
+    # cycle) — the paper's runtime "schedules other tasks", so a blocked
+    # action never wedges the FIFO in front of the set-future it waits on.
+    feasible = ~(p_defer & (fqn >= FQ))
+    pop = has & feasible
+    rotate = has & ~feasible
+    p_room &= pop; p_fwd &= pop; p_defer &= pop; p_null &= pop
+    is_app &= pop; is_alc &= pop; is_sf &= pop
+
+    # -- room: insert the edge into this RPVO node
+    eidx = jnp.minimum(ne, E - 1)
+    ohSE = (_oh(slot, S, p_room)[..., None]
+            & _oh(eidx, E)[..., None, :])                    # [H,W,S,E]
+    edst = jnp.where(ohSE, a0[..., None, None], st.edst)
+    ew = jnp.where(ohSE, i2f(a1)[..., None, None], st.ew)
+    nedges = st.nedges + _oh(slot, S, p_room).astype(jnp.int32)
+    prop = app.propagate_on_insert(vals_s)
+    ins_T = (p_room & prop).astype(jnp.int32)
+    ins_out = make_msg(OP_APP, a0, f2i(app.edge_value(vals_s[..., 0], i2f(a1))))
+
+    # -- fwd: recursively propagate the insert to the ghost (Listing 6 l.29)
+    ga_cur = sel(st.gaddr, slot)
+    fwd_out = make_msg(OP_INSERT_EDGE, ga_cur, a0, a1)
+
+    # -- defer: enqueue the insert on the pending future (Fig. 4 step 3)
+    push_mask = p_defer | p_null            # null also defers the edge itself
+    fqh = sel(st.fq_head, slot)
+    tailq = (fqh + fqn) % FQ
+    ohq = (_oh(slot, S, push_mask)[..., None]
+           & _oh(tailq, FQ)[..., None, :])                   # [H,W,S,FQ]
+    entry = jnp.stack([jnp.full((H, W), OP_INSERT_EDGE, jnp.int32), a0, a1],
+                      axis=-1)                               # [H,W,3]
+    fq = jnp.where(ohq[..., None], entry[..., None, None, :], st.fq)
+    fq_n = st.fq_n + _oh(slot, S, push_mask).astype(jnp.int32)
+
+    # -- null: future -> pending, send allocate with continuation (Fig. 3)
+    gstate = put(st.gstate, slot, G_PENDING, p_null)
+    tgt_cell = choose_alloc_cell(cfg, rows, cols, st.arot)
+    arot = st.arot + p_null.astype(jnp.int32)
+    null_out = make_msg(OP_ALLOC, tgt_cell * S, dst, f2i(vals_s[..., 0]))
+
+    # ---------------- APP action (Listing 5) ----------------
+    new_vals, changed = app.relax(vals_s, i2f(a0))
+    changed = changed & is_app
+    vals = put(st.vals, slot, new_vals, is_app)
+    app_T = jnp.where(changed, ne + (gs != G_NULL).astype(jnp.int32), 0)
+    cemit_new = new_vals[..., 0]
+
+    # ---------------- ALLOC (system action) ----------------
+    alc_room = is_alc & (st.nfree < S)
+    alc_full = is_alc & ~(st.nfree < S)
+    g_new = st.nfree
+    vals = put(vals, g_new,
+               jnp.full((H, W, cfg.n_vals), jnp.float32(app.init_val))
+               .at[..., 0].set(i2f(a1)), alc_room)
+    nedges = put(nedges, g_new, 0, alc_room)
+    gaddr0 = put(st.gaddr, g_new, -1, alc_room)
+    gstate = put(gstate, g_new, G_NULL, alc_room)
+    fq_n = put(fq_n, g_new, 0, alc_room)
+    fq_head = put(st.fq_head, g_new, 0, alc_room)
+    fwd_val = put(st.fwd_val, g_new, jnp.float32(1e9), alc_room)
+    fwd_pending = st.fwd_pending & ~_oh(g_new, S, alc_room)
+    new_addr = cellid * S + st.nfree
+    nfree = st.nfree + alc_room.astype(jnp.int32)
+    alc_ok_out = make_msg(OP_SET_FUTURE, a0, new_addr)
+    nxt_cell = (cellid + 1) % cfg.n_cells
+    alc_fwd_out = make_msg(OP_ALLOC, nxt_cell * S, a0, a1)
+
+    # ---------------- SET-FUTURE (continuation return, Fig. 3/4) ----------
+    gaddr = put(gaddr0, slot, a0, is_sf)
+    gstate = put(gstate, slot, G_SET, is_sf)
+    sf_T = jnp.where(is_sf,
+                     fqn + sel(st.fwd_pending, slot).astype(jnp.int32), 0)
+
+    # ---------------- combine: T, cout, registers, queue pop --------------
+    T = (ins_T
+         + jnp.where(p_fwd | p_null | alc_room | alc_full, 1, 0)
+         + app_T + sf_T)
+    cout = jnp.where(p_room[..., None], ins_out,
+            jnp.where(p_fwd[..., None], fwd_out,
+             jnp.where(p_null[..., None], null_out,
+              jnp.where(alc_room[..., None], alc_ok_out,
+               jnp.where(alc_full[..., None], alc_fwd_out, st.cout)))))
+
+    # pop (feasible) or rotate-to-tail (infeasible): head always advances
+    move = pop | rotate
+    tail = (st.aq_head + st.aq_n) % Q
+    ohT = _oh(tail, Q, rotate)                                # [H,W,Q]
+    aq = jnp.where(ohT[..., None], m[..., None, :], st.aq)
+    aq_n2 = st.aq_n - pop.astype(jnp.int32)
+    aq_h2 = (st.aq_head + move.astype(jnp.int32)) % Q
+    done0 = pop & (T == 0)   # single-cycle action
+    cvalid = st.cvalid | (pop & (T > 0))
+    cmsg = jnp.where(pop[..., None], m, st.cmsg)
+    cphase = jnp.where(pop, 1, st.cphase)
+    cT = jnp.where(pop, T, st.cT)
+    cemit = jnp.where(is_app, cemit_new, st.cemit)
+
+    st = st._replace(
+        vals=vals, nedges=nedges, edst=edst, ew=ew, gaddr=gaddr,
+        gstate=gstate, nfree=nfree, fq=fq, fq_n=fq_n, fq_head=fq_head,
+        fwd_val=fwd_val, fwd_pending=fwd_pending,
+        aq=aq, aq_n=aq_n2, aq_head=aq_h2, arot=arot,
+        cmsg=cmsg, cvalid=cvalid, cphase=cphase, cT=cT, cemit=cemit,
+        cout=cout,
+        stat_exec=st.stat_exec + jnp.sum(done0.astype(jnp.int32)),
+        stat_allocs=st.stat_allocs + jnp.sum(alc_room.astype(jnp.int32)),
+        stat_stall=st.stat_stall + jnp.sum(rotate.astype(jnp.int32)))
+    return st, pop

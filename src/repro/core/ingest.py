@@ -1,0 +1,85 @@
+"""Streaming edge ingestion via IO cells (paper §2, §4 "Graph Construction").
+
+One IO cell per chip column, attached to the row-0 cell of its column.
+Every cycle each IO cell reads the next edge of its residual stream,
+creates the registered ``insert-edge-action`` and sends it to its connected
+Compute Cell — entering the routing fabric there (action queue if the
+target vertex lives on that cell, else the proper YX outgoing channel).
+Backpressure stalls the IO cell (it retries the same edge next cycle).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rings
+from repro.core.config import EngineConfig
+from repro.core.msg import OP_INSERT_EDGE, TB_AQ_SELF, make_msg
+from repro.core.routing import yx_target_buffer
+from repro.core.state import MachineState, root_addr
+
+
+def load_stream(cfg: EngineConfig, st: MachineState,
+                edges: np.ndarray) -> MachineState:
+    """Distribute an increment's edges round-robin over the IO cells.
+
+    edges: int32 [m, 3] rows of (src vid, dst vid, weight bits).
+    Any residue from a previous increment is preserved (appended after).
+    """
+    IO, L = cfg.io_cells, cfg.io_stream_cap
+    io_edges = np.asarray(st.io_edges)
+    io_n = np.asarray(st.io_n).copy()
+    io_pos = np.asarray(st.io_pos).copy()
+    # compact: drop consumed prefix
+    new_edges = np.zeros_like(io_edges)
+    new_n = np.zeros_like(io_n)
+    for i in range(IO):
+        rem = io_edges[i, io_pos[i]:io_n[i]]
+        new_edges[i, :len(rem)] = rem
+        new_n[i] = len(rem)
+    edges = np.asarray(edges, np.int32).reshape(-1, 3)
+    for k, e in enumerate(edges):
+        i = k % IO
+        assert new_n[i] < L, "io_stream_cap too small for this increment"
+        new_edges[i, new_n[i]] = e
+        new_n[i] += 1
+    return st._replace(io_edges=jnp.asarray(new_edges),
+                       io_n=jnp.asarray(new_n),
+                       io_pos=jnp.zeros_like(st.io_pos))
+
+
+def io_stage(cfg: EngineConfig, st: MachineState, rows, cols):
+    """One injection attempt per IO cell per cycle (vectorized on row 0)."""
+    S, Q, C = cfg.slots, cfg.queue_cap, cfg.chan_cap
+    IO = cfg.io_cells  # == width
+    pend = st.io_pos < st.io_n                       # [IO]
+    cur = st.io_edges[jnp.arange(IO), jnp.minimum(st.io_pos, cfg.io_stream_cap - 1)]
+    tgt = root_addr(cfg, cur[:, 0])                  # insert at src's RPVO root
+    msg = make_msg(OP_INSERT_EDGE, tgt, root_addr(cfg, cur[:, 1]), cur[:, 2])
+
+    r0 = jnp.zeros((IO,), jnp.int32)
+    c0 = jnp.arange(IO, dtype=jnp.int32)
+    tb = yx_target_buffer(cfg, tgt // S, r0, c0)     # [IO]
+
+    accepted = jnp.zeros((IO,), bool)
+    aq, aq_n = st.aq, st.aq_n
+    ch, ch_n = st.ch, st.ch_n
+
+    # row-0 slices of the queues
+    want = pend & (tb == TB_AQ_SELF)
+    ok = want & rings.ring_free(aq_n[0], Q, cfg.aq_reserve + cfg.sys_reserve)
+    aq0, aqn0 = rings.ring_push(aq[0], aq_n[0], st.aq_head[0], msg, ok)
+    aq = aq.at[0].set(aq0)
+    aq_n = aq_n.at[0].set(aqn0)
+    accepted |= ok
+    for d in range(4):
+        want = pend & (tb == d)
+        ok = want & rings.ring_free(ch_n[0, :, d], C)
+        b, n = rings.ring_push(ch[0, :, d], ch_n[0, :, d], st.ch_head[0, :, d],
+                               msg, ok)
+        ch = ch.at[0, :, d].set(b)
+        ch_n = ch_n.at[0, :, d].set(n)
+        accepted |= ok
+
+    io_pos = st.io_pos + accepted.astype(jnp.int32)
+    return st._replace(aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n, io_pos=io_pos)

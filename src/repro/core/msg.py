@@ -1,0 +1,72 @@
+"""Active-message ("action") codec.
+
+A message is a fixed 5-word int32 record::
+
+    word 0  opcode        (OP_*, 0 = empty)
+    word 1  dst address   (cell * slots + slot)
+    word 2  arg0
+    word 3  arg1
+    word 4  arg2
+
+Float arguments (application values, e.g. BFS levels) are bit-cast into
+int32 words -- the 256-bit AM-CCA flit carries opaque operand words the
+same way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MSG_WORDS = 5
+
+# ---- opcodes ----
+OP_NOP = 0
+OP_INSERT_EDGE = 1    # args: (edge dst root addr, weight bits, -)
+OP_APP = 2            # args: (value bits, -, -)   the application action (e.g. bfs-action)
+OP_ALLOC = 3          # args: (requester addr, requester value bits, -)
+OP_SET_FUTURE = 4     # args: (new ghost addr, -, -)
+N_OPS = 5
+
+# ---- directions (mesh links) ----
+DIR_N, DIR_S, DIR_W, DIR_E = 0, 1, 2, 3
+N_DIRS = 4
+
+# ---- staging target-buffer codes (exec stage) ----
+TB_NONE = -1
+TB_CHAN_N, TB_CHAN_S, TB_CHAN_W, TB_CHAN_E = 0, 1, 2, 3
+TB_AQ_SELF = 4
+TB_FUTQ = 5
+
+
+def f2i(x):
+    """Bit-cast float32 -> int32 (payload word)."""
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.int32)
+
+
+def i2f(x):
+    """Bit-cast int32 -> float32."""
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.int32), jnp.float32)
+
+
+def make_msg(op, dst, a0=0, a1=0, a2=0):
+    """Build a message; broadcasting over leading dims."""
+    parts = jnp.broadcast_arrays(
+        jnp.asarray(op, jnp.int32), jnp.asarray(dst, jnp.int32),
+        jnp.asarray(a0, jnp.int32), jnp.asarray(a1, jnp.int32),
+        jnp.asarray(a2, jnp.int32))
+    return jnp.stack(parts, axis=-1)
+
+
+def msg_op(m):
+    return m[..., 0]
+
+
+def msg_dst(m):
+    return m[..., 1]
+
+
+def msg_arg(m, i):
+    return m[..., 2 + i]
+
+
+EMPTY_MSG = (0, 0, 0, 0, 0)

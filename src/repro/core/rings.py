@@ -1,0 +1,50 @@
+"""Vectorized fixed-capacity ring buffers over the cell grid.
+
+Every queue in the machine (action queues, channel buffers, future queues)
+is a ring buffer with leading batch dims (e.g. ``[H, W]`` or ``[H, W, S]``),
+a capacity axis, and a trailing message-word axis.
+
+Implementation note (§Perf, cca cell): pushes/pops are **one-hot
+`where` ops, not scatters/gathers**.  GSPMD partitions elementwise ops
+over the sharded cell grid trivially, whereas scatters with index arrays
+were being partitioned with per-cycle all-gathers of the updates (found
+in the chip_512x512 HLO audit).  On CPU the one-hot form is also faster:
+XLA vectorizes the compare+select, while scatter serializes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _iota(cap, dtype=jnp.int32):
+    return jnp.arange(cap, dtype=dtype)
+
+
+def ring_push(buf, cnt, head, msg, mask):
+    """Masked push.  buf: [*B, CAP, W]; cnt/head/mask: [*B]; msg: [*B, W].
+
+    Caller must guarantee ``cnt < CAP`` wherever ``mask`` is True.
+    """
+    cap = buf.shape[-2]
+    tail = (head + cnt) % cap
+    oh = (_iota(cap) == tail[..., None]) & mask[..., None]     # [*B, CAP]
+    buf = jnp.where(oh[..., None], msg[..., None, :], buf)
+    cnt = cnt + mask.astype(cnt.dtype)
+    return buf, cnt
+
+
+def ring_peek(buf, head):
+    """Read head element.  Returns [*B, W] (zeros where empty)."""
+    cap = buf.shape[-2]
+    oh = _iota(cap) == (head % cap)[..., None]                 # [*B, CAP]
+    return jnp.sum(jnp.where(oh[..., None], buf, 0), axis=-2)
+
+
+def ring_pop(cnt, head, cap, mask):
+    """Advance head (element itself read via ring_peek)."""
+    m = mask.astype(cnt.dtype)
+    return cnt - m, (head + m) % cap
+
+
+def ring_free(cnt, cap, reserve=0):
+    return cnt < (cap - reserve)

@@ -1,0 +1,140 @@
+"""YX dimension-ordered routing on the cell mesh (paper §4).
+
+Messages take vertical (row) hops first, then horizontal — the
+turn-restricted, minimal-path, deadlock-free YX variant of [Glass & Ni'92]
+cited by the paper.  One hop per cycle per link (256-bit flit).
+
+The hop stage is written as masked ``jnp.roll`` over the ``[H, W]`` grid.
+Under pjit/GSPMD with the grid sharded over mesh axes this lowers to
+``collective-permute`` at tile boundaries — the TPU ICI plays the role of
+the AM-CCA mesh links (DESIGN §2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.config import EngineConfig
+from repro.core.msg import (DIR_E, DIR_N, DIR_S, DIR_W, OP_ALLOC,
+                            OP_SET_FUTURE, TB_AQ_SELF, TB_CHAN_E, TB_CHAN_N,
+                            TB_CHAN_S, TB_CHAN_W)
+from repro.core import rings
+from repro.core.state import MachineState
+
+
+def yx_target_buffer(cfg: EngineConfig, dst_cell, rows, cols):
+    """Next-buffer code for a message sitting at cell (rows, cols).
+
+    Vertical first, then horizontal, deliver locally when arrived.
+    Shapes broadcast; returns int32 target-buffer codes (TB_*).
+    """
+    dr = dst_cell // cfg.width
+    dc = dst_cell % cfg.width
+    vert = jnp.where(dr < rows, TB_CHAN_N, TB_CHAN_S)
+    horiz = jnp.where(dc < cols, TB_CHAN_W, TB_CHAN_E)
+    out = jnp.where(dr != rows, vert, jnp.where(dc != cols, horiz, TB_AQ_SELF))
+    return out.astype(jnp.int32)
+
+
+# direction -> (row shift, col shift) that moves a message ALONG d.
+_SHIFT = {DIR_N: (-1, 0), DIR_S: (1, 0), DIR_W: (0, -1), DIR_E: (0, 1)}
+
+
+def shift_to_receiver(arr, d):
+    """Move per-sender values [H,W,...] so they align with the receiving cell.
+
+    A message leaving (r,c) northwards arrives at (r-1,c): roll by -1 on
+    rows.  Mesh (non-torus): wrapped lanes are masked by the caller using
+    `valid_receiver_mask`.
+    """
+    dy, dx = _SHIFT[d]
+    a = arr
+    if dy:
+        a = jnp.roll(a, dy, axis=0)
+    if dx:
+        a = jnp.roll(a, dx, axis=1)
+    return a
+
+
+def shift_to_sender(arr, d):
+    """Inverse of shift_to_receiver (align acceptance back to the sender)."""
+    dy, dx = _SHIFT[d]
+    a = arr
+    if dy:
+        a = jnp.roll(a, -dy, axis=0)
+    if dx:
+        a = jnp.roll(a, -dx, axis=1)
+    return a
+
+
+def valid_receiver_mask(cfg: EngineConfig, d):
+    """[H,W] bool: True where a received-from-direction-d slot is real
+    (i.e. not a torus wrap-around artifact of jnp.roll)."""
+    H, W = cfg.height, cfg.width
+    r = jnp.arange(H)[:, None]
+    c = jnp.arange(W)[None, :]
+    if d == DIR_N:
+        m = r < H - 1   # receiver row r gets from sender row r+1... see note
+    elif d == DIR_S:
+        m = r > 0
+    elif d == DIR_W:
+        m = c < W - 1
+    else:
+        m = c > 0
+    return jnp.broadcast_to(m, (H, W))
+
+
+def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
+    """One routing cycle: the head of every occupied channel tries to hop
+    one link.  At the receiver it is delivered to the action queue (if it
+    arrived) or appended to the proper outgoing channel per YX order.
+    Full buffers exert backpressure: the head simply stays (wormhole-style
+    stall); YX dimension order keeps this deadlock-free.
+
+    Links are arbitrated in fixed direction order N,S,W,E so multiple
+    arrivals at one cell in the same cycle are sequenced deterministically.
+    Returns (state, hops_this_cycle).
+    """
+    Q, C = cfg.queue_cap, cfg.chan_cap
+    hops = jnp.int32(0)
+    aq, aq_n, aq_head = st.aq, st.aq_n, st.aq_head
+    ch, ch_n, ch_head = st.ch, st.ch_n, st.ch_head
+
+    for d in (DIR_N, DIR_S, DIR_W, DIR_E):
+        # head message of every cell's outgoing channel d
+        head_msg = rings.ring_peek(ch[:, :, d], ch_head[:, :, d])  # [H,W,MSG]
+        occupied = ch_n[:, :, d] > 0
+        # align with receiver
+        msg_r = shift_to_receiver(head_msg, d)
+        occ_r = shift_to_receiver(occupied, d) & valid_receiver_mask(cfg, d)
+        dst_cell = msg_r[..., 1] // cfg.slots
+        tb = yx_target_buffer(cfg, dst_cell, rows, cols)       # [H,W]
+        # deliver to AQ.  External pushes respect the local-emission
+        # reserve; system actions (allocate / set-future) additionally get
+        # the sys_reserve headroom so the future protocol always advances.
+        is_sys = (msg_r[..., 0] == OP_ALLOC) | (msg_r[..., 0] == OP_SET_FUTURE)
+        want_aq = occ_r & (tb == TB_AQ_SELF)
+        room = jnp.where(is_sys,
+                         rings.ring_free(aq_n, Q, cfg.aq_reserve),
+                         rings.ring_free(aq_n, Q,
+                                         cfg.aq_reserve + cfg.sys_reserve))
+        ok_aq = want_aq & room
+        aq, aq_n = rings.ring_push(aq, aq_n, aq_head, msg_r, ok_aq)
+        # or forward into one of our outgoing channels
+        ok_fwd = jnp.zeros_like(want_aq)
+        for td in (DIR_N, DIR_S, DIR_W, DIR_E):
+            want = occ_r & (tb == td)
+            ok = want & rings.ring_free(ch_n[:, :, td], C)
+            new_b, new_n = rings.ring_push(
+                ch[:, :, td], ch_n[:, :, td], ch_head[:, :, td], msg_r, ok)
+            ch = ch.at[:, :, td].set(new_b)
+            ch_n = ch_n.at[:, :, td].set(new_n)
+            ok_fwd = ok_fwd | ok
+        accepted_r = ok_aq | ok_fwd
+        hops = hops + jnp.sum(accepted_r.astype(jnp.int32))
+        # pop at the sender where the hop succeeded
+        acc_s = shift_to_sender(accepted_r, d)
+        n2, h2 = rings.ring_pop(ch_n[:, :, d], ch_head[:, :, d], C, acc_s)
+        ch_n = ch_n.at[:, :, d].set(n2)
+        ch_head = ch_head.at[:, :, d].set(h2)
+
+    return st._replace(aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n, ch_head=ch_head), hops

@@ -1,0 +1,130 @@
+"""Machine state: the whole AM-CCA chip as one fixed-shape pytree.
+
+Slot layout per cell: slots ``[0, R)`` are RPVO roots (vertex ``v`` lives at
+cell ``v % n_cells``, slot ``v // n_cells``); slots ``[R, S)`` are ghost
+slots handed out by the allocator.  A global address is
+``addr = cell * S + slot`` (int32).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import EngineConfig
+from repro.core.msg import MSG_WORDS, N_DIRS
+
+# ghost-future states (paper Fig. 4)
+G_NULL, G_PENDING, G_SET = 0, 1, 2
+
+INF = jnp.float32(1e9)
+
+
+class MachineState(NamedTuple):
+    # --- RPVO slot storage [H, W, S, ...] ---
+    vals: jax.Array        # [H,W,S,VN] f32  application values (BFS level, ...)
+    nedges: jax.Array      # [H,W,S]    i32  edges in this RPVO node
+    edst: jax.Array        # [H,W,S,E]  i32  edge dst = root addr of dst vertex
+    ew: jax.Array          # [H,W,S,E]  f32  edge weight
+    gaddr: jax.Array       # [H,W,S]    i32  ghost address (-1 if none)
+    gstate: jax.Array      # [H,W,S]    i32  future state: null/pending/set
+    nfree: jax.Array       # [H,W]      i32  next free ghost slot
+    # --- future LCO deferred queues [H,W,S,FQ,3]: (op, arg0, arg1) ---
+    fq: jax.Array
+    fq_n: jax.Array        # [H,W,S] i32
+    fq_head: jax.Array     # [H,W,S] i32
+    # --- coalesced deferred app-forward (futures merge monotone relaxes) ---
+    fwd_val: jax.Array     # [H,W,S] f32
+    fwd_pending: jax.Array # [H,W,S] bool
+    # --- per-cell action queue ---
+    aq: jax.Array          # [H,W,Q,MSG] i32
+    aq_n: jax.Array        # [H,W] i32
+    aq_head: jax.Array     # [H,W] i32
+    # --- per-cell, per-direction outgoing channels ---
+    ch: jax.Array          # [H,W,4,C,MSG] i32
+    ch_n: jax.Array        # [H,W,4] i32
+    ch_head: jax.Array     # [H,W,4] i32
+    # --- active-action registers (serialized execute/propagate; 1 op/cycle) ---
+    cmsg: jax.Array        # [H,W,MSG] i32
+    cvalid: jax.Array      # [H,W] bool
+    cphase: jax.Array      # [H,W] i32   emissions staged so far + 1
+    cT: jax.Array          # [H,W] i32   total emissions of the active action
+    cemit: jax.Array       # [H,W] f32   snapshot of the emission source value
+    cout: jax.Array        # [H,W,MSG] i32 precomputed single emission
+    # --- IO cells (streaming ingestion) ---
+    io_edges: jax.Array    # [IO, L, 3] i32 (src vid, dst vid, weight bits)
+    io_n: jax.Array        # [IO] i32 edges loaded
+    io_pos: jax.Array      # [IO] i32 cursor
+    # --- allocator rotation counters ---
+    arot: jax.Array        # [H,W] i32
+    # --- cycle counters / stats (per-chunk, host-accumulated) ---
+    cycle: jax.Array       # scalar i32
+    stat_hops: jax.Array   # scalar i32 (reset per chunk; host accumulates)
+    stat_exec: jax.Array   # scalar i32 actions completed
+    stat_stall: jax.Array  # scalar i32 staging stalls
+    stat_allocs: jax.Array # scalar i32 ghost allocations
+
+
+def init_state(cfg: EngineConfig, init_vals: float | np.ndarray = 1e9) -> MachineState:
+    """Fresh machine: all vertices allocated as roots, no edges, empty queues."""
+    cfg.validate()
+    H, W, S, E = cfg.height, cfg.width, cfg.slots, cfg.edge_cap
+    VN, FQ, Q, C = cfg.n_vals, cfg.futq_cap, cfg.queue_cap, cfg.chan_cap
+    IO, L = cfg.io_cells, cfg.io_stream_cap
+    z32 = lambda *s: jnp.zeros(s, jnp.int32)
+    vals = jnp.full((H, W, S, VN), jnp.float32(init_vals))
+    return MachineState(
+        vals=vals,
+        nedges=z32(H, W, S),
+        edst=jnp.full((H, W, S, E), -1, jnp.int32),
+        ew=jnp.zeros((H, W, S, E), jnp.float32),
+        gaddr=jnp.full((H, W, S), -1, jnp.int32),
+        gstate=z32(H, W, S),
+        nfree=jnp.full((H, W), cfg.root_slots, jnp.int32),
+        fq=z32(H, W, S, FQ, 3),
+        fq_n=z32(H, W, S), fq_head=z32(H, W, S),
+        fwd_val=jnp.full((H, W, S), INF),
+        fwd_pending=jnp.zeros((H, W, S), bool),
+        aq=z32(H, W, Q, MSG_WORDS), aq_n=z32(H, W), aq_head=z32(H, W),
+        ch=z32(H, W, N_DIRS, C, MSG_WORDS),
+        ch_n=z32(H, W, N_DIRS), ch_head=z32(H, W, N_DIRS),
+        cmsg=z32(H, W, MSG_WORDS),
+        cvalid=jnp.zeros((H, W), bool),
+        cphase=z32(H, W), cT=z32(H, W),
+        cemit=jnp.zeros((H, W), jnp.float32),
+        cout=z32(H, W, MSG_WORDS),
+        io_edges=z32(IO, L, 3), io_n=z32(IO), io_pos=z32(IO),
+        arot=z32(H, W),
+        cycle=jnp.int32(0), stat_hops=jnp.int32(0), stat_exec=jnp.int32(0),
+        stat_stall=jnp.int32(0), stat_allocs=jnp.int32(0),
+    )
+
+
+# ---------------- addressing helpers ----------------
+
+def root_addr(cfg: EngineConfig, vid):
+    """Global address of vertex vid's RPVO root."""
+    vid = jnp.asarray(vid, jnp.int32)
+    cell = vid % cfg.n_cells
+    slot = vid // cfg.n_cells
+    return cell * cfg.slots + slot
+
+
+def addr_cell(cfg: EngineConfig, addr):
+    return addr // cfg.slots
+
+
+def addr_slot(cfg: EngineConfig, addr):
+    return addr % cfg.slots
+
+
+def cell_rc(cfg: EngineConfig, cell):
+    return cell // cfg.width, cell % cfg.width
+
+
+def self_cell_grid(cfg: EngineConfig):
+    """[H,W] array of flat cell ids."""
+    return (jnp.arange(cfg.height, dtype=jnp.int32)[:, None] * cfg.width
+            + jnp.arange(cfg.width, dtype=jnp.int32)[None, :])

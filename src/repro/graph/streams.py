@@ -1,0 +1,142 @@
+"""Streaming dynamic graph generators — GraphChallenge-style (paper §4).
+
+The paper uses MIT GraphChallenge stochastic-block-partition streaming
+graphs (Table 1): 50K/500K vertices, ~1.0M/10.2M edges, delivered in ten
+increments under two sampling regimes:
+
+  * **Edge sampling**   — edges arrive in random (real-world observation)
+    order, so increments have near-equal size.
+  * **Snowball sampling** — edges arrive as discovered by an expanding
+    frontier from a start vertex, so increments grow monotonically
+    (the paper's Table 1 shows 37K -> 191K for the 50K graph).
+
+The datasets are offline here, so we synthesize stochastic-block-model
+graphs of the same shape and stream them with the same two samplers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    n_vertices: int = 50_000
+    n_edges: int = 1_000_000
+    n_blocks: int = 32          # SBM community count
+    p_in_over_p_out: float = 16.0
+    increments: int = 10
+    sampling: str = "edge"      # "edge" | "snowball"
+    seed: int = 0
+    symmetric: bool = False     # insert both directions
+
+
+def sbm_edges(spec: StreamSpec) -> np.ndarray:
+    """Sample ~n_edges unique directed edges of a stochastic block model."""
+    rng = np.random.default_rng(spec.seed)
+    V, B = spec.n_vertices, spec.n_blocks
+    block = rng.integers(0, B, size=V)
+    m = 0
+    chunks = []
+    seen = set()
+    # rejection-sample: propose intra-block with prob prop. to p_in ratio
+    p_intra = spec.p_in_over_p_out / (spec.p_in_over_p_out + B - 1)
+    while m < spec.n_edges:
+        k = min(4 * (spec.n_edges - m) + 1024, 4_000_000)
+        src = rng.integers(0, V, size=k)
+        intra = rng.random(k) < p_intra
+        # intra: dst from same block; inter: uniform
+        dst = rng.integers(0, V, size=k)
+        # resample intra dsts from src's block by jittering within block lists
+        order = np.argsort(block, kind="stable")
+        starts = np.searchsorted(block[order], np.arange(B))
+        ends = np.searchsorted(block[order], np.arange(B), side="right")
+        b = block[src]
+        lo, hi = starts[b], ends[b]
+        pick = lo + (rng.integers(0, 1 << 30, size=k) % np.maximum(hi - lo, 1))
+        dst = np.where(intra, order[pick], dst)
+        ok = src != dst
+        src, dst = src[ok], dst[ok]
+        for s, d in zip(src, dst):
+            key = (int(s) << 32) | int(d)
+            if key not in seen:
+                seen.add(key)
+                chunks.append((s, d))
+                m += 1
+                if m >= spec.n_edges:
+                    break
+    e = np.asarray(chunks, dtype=np.int64)
+    return e.astype(np.int32)
+
+
+def edge_sampled_stream(edges: np.ndarray, increments: int,
+                        seed: int = 0) -> list[np.ndarray]:
+    """Random arrival order, equal-size increments (Table 1 'Edge')."""
+    rng = np.random.default_rng(seed + 1)
+    perm = rng.permutation(len(edges))
+    parts = np.array_split(perm, increments)
+    return [edges[p] for p in parts]
+
+
+def snowball_stream(edges: np.ndarray, increments: int, source: int = 0,
+                    seed: int = 0) -> list[np.ndarray]:
+    """Edges arrive as discovered by BFS from `source` (Table 1 'Snowball').
+
+    Produces monotonically growing increments like the paper by splitting
+    the discovery order at quadratically spaced cut points.
+    """
+    n = int(max(edges[:, 0].max(), edges[:, 1].max())) + 1
+    # adjacency (undirected discovery like the GraphChallenge snowball)
+    order = np.zeros(len(edges), dtype=np.int64)
+    adj_idx = {}
+    for i, (s, d) in enumerate(edges):
+        adj_idx.setdefault(int(s), []).append(i)
+        adj_idx.setdefault(int(d), []).append(i)
+    seen_v = np.zeros(n, bool)
+    seen_e = np.zeros(len(edges), bool)
+    outq = [source]
+    seen_v[source] = True
+    pos = 0
+    k = 0
+    while outq:
+        nxt = []
+        for v in outq:
+            for ei in adj_idx.get(v, ()):
+                if not seen_e[ei]:
+                    seen_e[ei] = True
+                    order[k] = ei
+                    k += 1
+                    s, d = edges[ei]
+                    for u in (int(s), int(d)):
+                        if not seen_v[u]:
+                            seen_v[u] = True
+                            nxt.append(u)
+        outq = nxt
+    # disconnected leftovers arrive last
+    rest = np.nonzero(~seen_e)[0]
+    order[k:k + len(rest)] = rest
+    k += len(rest)
+    order = order[:k]
+    # quadratic cut points -> growing increments (paper Table 1 pattern)
+    w = np.arange(1, increments + 1, dtype=np.float64)
+    cuts = np.cumsum(w / w.sum()) * k
+    cuts = np.unique(np.round(cuts).astype(np.int64))[:-1]
+    return [edges[p] for p in np.split(order, cuts)]
+
+
+def make_stream(spec: StreamSpec) -> list[np.ndarray]:
+    edges = sbm_edges(spec)
+    if spec.symmetric:
+        edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    if spec.sampling == "edge":
+        incs = edge_sampled_stream(edges, spec.increments, spec.seed)
+    elif spec.sampling == "snowball":
+        incs = snowball_stream(edges, spec.increments, source=0,
+                               seed=spec.seed)
+    else:
+        raise ValueError(spec.sampling)
+    # attach unit weights (bit pattern of 1.0f)
+    one = np.float32(1.0).view(np.int32)
+    return [np.concatenate([e, np.full((len(e), 1), one, np.int32)], axis=1)
+            for e in incs]

@@ -1,0 +1,21 @@
+"""Jitted EmbeddingBag wrapper."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_fwd
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("combiner", "interpret"))
+def embedding_bag(table, indices, *, combiner="sum", interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return embedding_bag_fwd(table, indices, combiner=combiner,
+                             interpret=interpret)
+
+
+embedding_bag_reference = jax.jit(embedding_bag_ref,
+                                  static_argnames=("combiner",))

@@ -1,0 +1,13 @@
+"""Oracle for EmbeddingBag: gather + bag reduce."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, combiner="sum"):
+    """table: [V, D]; indices: [B, L] -> [B, D]."""
+    rows = jnp.take(table, indices, axis=0)
+    out = rows.sum(axis=1)
+    if combiner == "mean":
+        out = out / indices.shape[1]
+    return out

@@ -1,0 +1,22 @@
+"""Jitted wrappers: pick Pallas on TPU, interpret-mode on CPU tests."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128,
+                    interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_fwd(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=interpret)
+
+
+attention_reference = jax.jit(attention_ref, static_argnames=("causal",))

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for causal GQA attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """q: [B, Tq, H, dh]; k/v: [B, Tk, Kh, dh] -> [B, Tq, H, dh] (f32)."""
+    B, Tq, H, dh = q.shape
+    Tk, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    qf = q.astype(jnp.float32) / np.sqrt(dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, G, axis=2)
+    vf = jnp.repeat(vf, G, axis=2)
+    s = jnp.einsum("bthd,bshd->bhts", qf, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((Tq, Tk), bool), k=Tk - Tq)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhts,bshd->bthd", p, vf)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: [B, 1, H, dh]; caches [B, T, Kh, dh]; lengths [B] -> [B,1,H,dh]."""
+    B, _, H, dh = q.shape
+    T, Kh = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kh
+    qf = q[:, 0].astype(jnp.float32) / np.sqrt(dh)
+    kf = jnp.repeat(k_cache.astype(jnp.float32), G, axis=2)
+    vf = jnp.repeat(v_cache.astype(jnp.float32), G, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", qf, kf)
+    mask = jnp.arange(T)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, :], s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhs,bshd->bhd", p, vf)[:, None]

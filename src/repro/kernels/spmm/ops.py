@@ -1,0 +1,27 @@
+"""Jitted wrapper: full SpMM (gather -> message -> MXU scatter)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmm.kernel import scatter_spmm
+from repro.kernels.spmm.ref import scatter_spmm_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_nodes", "bn", "be", "interpret"))
+def spmm_sorted_coo(x, src, dst, n_nodes, coeff=None, *, bn=128, be=256,
+                    interpret=None):
+    """A @ X over a COO edge list sorted by dst (the GNN hot path)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    msgs = x[src]
+    if coeff is not None:
+        msgs = msgs * coeff[:, None]
+    return scatter_spmm(msgs, dst, n_nodes, bn=bn, be=be,
+                        interpret=interpret)
+
+
+spmm_reference = jax.jit(scatter_spmm_ref, static_argnames=("n_nodes",))

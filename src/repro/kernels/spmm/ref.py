@@ -1,0 +1,9 @@
+"""Oracle for the scatter-SpMM: plain segment_sum."""
+from __future__ import annotations
+
+import jax
+
+
+def scatter_spmm_ref(msgs, dst, n_nodes):
+    """msgs: [E, D]; dst: [E] -> [N, D] summed by destination."""
+    return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)

@@ -1,0 +1,136 @@
+"""Roofline-term extraction from compiled dry-run artifacts (DESIGN §7).
+
+Terms, per device (cost_analysis on post-SPMD HLO is per-device — verified
+by probe):
+
+  compute    = HLO_FLOPs        / PEAK_FLOPS      (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes        / HBM_BW          (819 GB/s)
+  collective = collective_bytes / LINK_BW         (~50 GB/s/link ICI)
+
+collective_bytes is parsed from the compiled HLO text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op we take max(operand bytes, result bytes) — single-link serialization,
+a conservative upper bound.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind byte totals (per device)."""
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for kind in COLLECTIVES:
+            # match '= <shape> kind(' and variants like all-reduce-start
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                shapes = [_shape_bytes(m)
+                          for m in _SHAPE_RE.finditer(line)]
+                if shapes:
+                    out[kind] += max(shapes)
+                    counts[kind] += 1
+                break
+    out["n_ops"] = sum(counts.values())
+    out["counts"] = counts
+    return out
+
+
+def roofline_terms(flops: float, bytes_acc: float, coll: dict) -> dict:
+    coll_bytes = sum(v for k, v in coll.items() if k in COLLECTIVES)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_acc / HBM_BW
+    t_x = coll_bytes / LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    return dict(t_compute=t_c, t_memory=t_m, t_collective=t_x,
+                coll_bytes=coll_bytes, dominant=dom[1],
+                bound_s=max(t_c, t_m, t_x),
+                # fraction of the bound that is useful MXU work
+                roofline_fraction=(t_c / max(t_c, t_m, t_x)
+                                   if max(t_c, t_m, t_x) > 0 else 0.0))
+
+
+# -------------------- analytic MODEL_FLOPS (global) --------------------
+
+def model_flops(bundle, spec) -> float:
+    """Paper-standard useful-FLOPs estimate for the whole step (global)."""
+    fam, kind = bundle.family, spec.kind
+    if fam == "lm":
+        cfg = bundle.config
+        n_act = cfg.n_active_params()
+        B = spec.dim("global_batch")
+        T = spec.dim("seq_len")
+        if kind == "lm_train":
+            return 6.0 * n_act * B * T
+        if kind == "lm_prefill":
+            return 2.0 * n_act * B * T
+        # decode: one token + attention over the KV cache
+        attn = 4.0 * B * T * cfg.n_heads * cfg.dh * cfg.n_layers
+        return 2.0 * n_act * B + attn
+    if fam == "gnn":
+        cfg = bundle.config
+        d = dict(spec.dims)
+        if kind == "gnn_minibatch":
+            from repro.data.graphs import sampled_subgraph_sizes
+            n, e = sampled_subgraph_sizes(d)
+        elif kind == "gnn_batched":
+            n, e = d["batch"] * d["n_nodes"], d["batch"] * d["n_edges"]
+        else:
+            n, e = d["n_nodes"], d["n_edges"]
+        dh, L = cfg.d_hidden, cfg.n_layers
+        din = d.get("d_feat", cfg.d_in)
+        if cfg.kind == "gcn":
+            fwd = 2 * n * din * dh + 2 * (L - 1) * n * dh * dh \
+                + 2 * L * e * dh
+        elif cfg.kind == "gatedgcn":
+            fwd = 2 * n * din * dh + L * (2 * (3 * e + 2 * n) * dh * dh
+                                          + 8 * e * dh)
+        elif cfg.kind == "meshgraphnet":
+            fwd = 2 * n * din * dh + L * (8 * e * dh * dh
+                                          + 6 * n * dh * dh)
+        else:  # graphcast: processor on the multimesh + enc/dec blocks
+            from repro.data.graphs import graphcast_sizes
+            gs = graphcast_sizes(cfg, n)
+            nm, em = gs["n_mesh"], gs["e_mesh"]
+            fwd = (2 * n * din * dh
+                   + 8 * (gs["e_g2m"] + gs["e_m2g"]) * dh * dh
+                   + 6 * (n + nm) * dh * dh
+                   + L * (8 * em * dh * dh + 6 * nm * dh * dh))
+        return 3.0 * fwd  # train step: fwd + bwd
+    if fam == "recsys":
+        cfg = bundle.config
+        B = spec.dim("batch")
+        mlp = cfg.n_params() - sum(cfg.resolved_vocabs()) * cfg.embed_dim
+        mult = 6.0 if kind == "recsys_train" else 2.0
+        inter = 2.0 * B * (cfg.n_sparse + 1) ** 2 * cfg.embed_dim
+        flop = mult * mlp * B + inter
+        if kind == "recsys_retrieval":
+            flop += 2.0 * spec.dim("n_candidates") * cfg.bot_mlp[-1]
+        return flop
+    return float("nan")  # cca: actions/cycle is the relevant metric

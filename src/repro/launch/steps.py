@@ -1,0 +1,287 @@
+"""Step builders: per (arch x shape) jittable step functions + abstract
+input specs (ShapeDtypeStruct — no allocation) + shardings.
+
+This is the single source of truth used by the dry-run, the roofline
+analysis, and the end-to-end drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchBundle, ShapeSpec
+from repro.dist import ctx as dist_ctx
+from repro.dist.sharding import (cca_state_shardings, dlrm_batch_shardings,
+                                 dlrm_param_shardings, gnn_axes,
+                                 gnn_graph_shardings, gnn_param_shardings,
+                                 lm_batch_shardings, lm_cache_shardings,
+                                 lm_param_shardings, pad_to)
+from repro.launch.mesh import dp_axes
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+
+
+class StepPlan(NamedTuple):
+    step: callable
+    args: tuple          # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    donate: tuple = ()
+    static_desc: str = ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _rep(mesh, tree):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, P(*((None,) * l.ndim))), tree)
+
+
+# ------------------------------------------------------------------ LM ---
+
+def _lm_cfg(bundle, overrides):
+    cfg = bundle.config
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_impl="ep")
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def _lm_train_plan(bundle: ArchBundle, spec: ShapeSpec, mesh,
+                   overrides=None) -> StepPlan:
+    from repro.models.transformer import init_lm_params, lm_loss
+    cfg = _lm_cfg(bundle, overrides)
+    B = spec.dim("global_batch")
+    T = spec.dim("seq_len")
+    opt_cfg = AdamWConfig()
+
+    params_shape = jax.eval_shape(
+        functools.partial(init_lm_params, cfg), jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(init_adamw, params_shape)
+    batch = dict(tokens=_sds((B, T), jnp.int32),
+                 targets=_sds((B, T), jnp.int32))
+
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch))(params)
+        params, opt, gnorm = adamw_update(opt_cfg, grads, opt, params)
+        return params, opt, loss, gnorm
+
+    pshard = lm_param_shardings(mesh, params_shape)
+    oshard = type(opt_shape)(
+        step=NamedSharding(mesh, P()), m=pshard, v=pshard)
+    return StepPlan(step, (params_shape, opt_shape, batch),
+                    (pshard, oshard, lm_batch_shardings(mesh)),
+                    donate=(0, 1), static_desc=f"{cfg.name} train B{B} T{T}")
+
+
+def _lm_prefill_plan(bundle, spec, mesh, overrides=None) -> StepPlan:
+    from repro.models.transformer import init_lm_params, lm_forward
+    cfg = _lm_cfg(bundle, overrides)
+    B, T = spec.dim("global_batch"), spec.dim("seq_len")
+    params_shape = jax.eval_shape(
+        functools.partial(init_lm_params, cfg), jax.random.PRNGKey(0))
+    batch = dict(tokens=_sds((B, T), jnp.int32))
+
+    def step(params, batch):
+        logits, _ = lm_forward(cfg, params, batch["tokens"])
+        return logits[:, -1, :]  # serving returns last-token logits
+
+    return StepPlan(step, (params_shape, batch),
+                    (lm_param_shardings(mesh, params_shape),
+                     dict(tokens=NamedSharding(mesh, P(dp_axes(mesh), None)))),
+                    static_desc=f"{cfg.name} prefill B{B} T{T}")
+
+
+def _lm_decode_plan(bundle, spec, mesh, overrides=None) -> StepPlan:
+    from repro.models.transformer import (init_kv_cache, init_lm_params,
+                                          lm_decode_step)
+    cfg = dataclasses.replace(_lm_cfg(bundle, overrides), remat=False)
+    B, T = spec.dim("global_batch"), spec.dim("seq_len")
+    params_shape = jax.eval_shape(
+        functools.partial(init_lm_params, cfg), jax.random.PRNGKey(0))
+    cache_shape = jax.eval_shape(
+        functools.partial(init_kv_cache, cfg, B, T))
+    toks = _sds((B, 1), jnp.int32)
+    lens = _sds((B,), jnp.int32)
+
+    def step(params, tokens, cache, lengths):
+        logits, cache = lm_decode_step(cfg, params, tokens, cache, lengths)
+        return logits, cache
+
+    dp = dp_axes(mesh)
+    tok_spec = NamedSharding(mesh, P(dp, None)) if B > 1 else \
+        NamedSharding(mesh, P(None, None))
+    len_spec = NamedSharding(mesh, P(dp)) if B > 1 else \
+        NamedSharding(mesh, P(None))
+    return StepPlan(
+        step, (params_shape, toks, cache_shape, lens),
+        (lm_param_shardings(mesh, params_shape), tok_spec,
+         lm_cache_shardings(mesh, cfg, B), len_spec),
+        donate=(2,), static_desc=f"{cfg.name} decode B{B} KV{T}")
+
+
+# ----------------------------------------------------------------- GNN ---
+
+def _gnn_graph_specs(cfg, spec, mesh):
+    """Padded abstract Graph + labels/mask for a shape spec."""
+    from repro.data.graphs import graphcast_sizes, sampled_subgraph_sizes
+    from repro.models.gnn import Graph
+    d = dict(spec.dims)
+    mult = int(np.prod([mesh.shape[a] for a in gnn_axes(mesh)]))
+    if spec.kind == "gnn_minibatch":
+        n, e = sampled_subgraph_sizes(d)
+    elif spec.kind == "gnn_batched":
+        n, e = d["batch"] * d["n_nodes"], d["batch"] * d["n_edges"]
+    else:
+        n, e = d["n_nodes"], d["n_edges"]
+    n, e = pad_to(n, mult), pad_to(e, mult)
+    cfg = dataclasses.replace(cfg, d_in=d["d_feat"])
+    fields = dict(x=_sds((n, d["d_feat"]), jnp.float32),
+                  edge_index=_sds((2, e), jnp.int32))
+    if cfg.kind == "graphcast":
+        gs = graphcast_sizes(cfg, n)
+        fields.update(
+            mesh_edge_index=_sds((2, pad_to(gs["e_mesh"], mult)), jnp.int32),
+            g2m_edge_index=_sds((2, pad_to(gs["e_g2m"], mult)), jnp.int32),
+            m2g_edge_index=_sds((2, pad_to(gs["e_m2g"], mult)), jnp.int32))
+    graph = Graph(**fields)
+    return cfg, graph, n
+
+
+def _gnn_train_plan(bundle, spec, mesh) -> StepPlan:
+    from repro.models.gnn import gnn_loss, init_gnn_params
+    cfg, graph, n = _gnn_graph_specs(bundle.config, spec, mesh)
+    regression = cfg.kind in ("graphcast", "meshgraphnet")
+    labels = _sds((n, cfg.d_out), jnp.float32) if regression \
+        else _sds((n,), jnp.int32)
+    mask = _sds((n,), jnp.float32)
+    params_shape = jax.eval_shape(
+        functools.partial(init_gnn_params, cfg), jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig()
+    opt_shape = jax.eval_shape(init_adamw, params_shape)
+
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn_loss(cfg, p, batch))(params)
+        params, opt, gnorm = adamw_update(opt_cfg, grads, opt, params)
+        return params, opt, loss, gnorm
+
+    ax = gnn_axes(mesh)
+    gshard = type(graph)(**{
+        **{k: None for k in graph._fields},
+        **gnn_graph_shardings(mesh, graph._asdict())})
+    bshard = dict(graph=gshard,
+                  labels=NamedSharding(mesh, P(ax, None)) if regression
+                  else NamedSharding(mesh, P(ax)),
+                  mask=NamedSharding(mesh, P(ax)))
+    pshard = gnn_param_shardings(mesh, params_shape)
+    oshard = type(opt_shape)(step=NamedSharding(mesh, P()),
+                             m=pshard, v=pshard)
+    batch = dict(graph=graph, labels=labels, mask=mask)
+    return StepPlan(step, (params_shape, opt_shape, batch),
+                    (pshard, oshard, bshard), donate=(0, 1),
+                    static_desc=f"{cfg.name} {spec.name} N{n}")
+
+
+# -------------------------------------------------------------- RecSys ---
+
+def _dlrm_plan(bundle, spec, mesh) -> StepPlan:
+    from repro.models.dlrm import (dlrm_forward, dlrm_loss,
+                                   init_dlrm_params, retrieval_score)
+    cfg = bundle.config
+    B = spec.dim("batch")
+    L = cfg.lookups_per_field
+    params_shape = jax.eval_shape(
+        functools.partial(init_dlrm_params, cfg), jax.random.PRNGKey(0))
+    batch = dict(dense=_sds((B, cfg.n_dense), jnp.float32),
+                 sparse=_sds((B, cfg.n_sparse, L), jnp.int32),
+                 labels=_sds((B,), jnp.int32))
+    pshard = dlrm_param_shardings(mesh, params_shape)
+
+    if spec.kind == "recsys_train":
+        opt_cfg = AdamWConfig()
+        opt_shape = jax.eval_shape(init_adamw, params_shape)
+
+        def step(params, opt, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: dlrm_loss(cfg, p, batch))(params)
+            params, opt, gnorm = adamw_update(opt_cfg, grads, opt, params)
+            return params, opt, loss, gnorm
+
+        oshard = type(opt_shape)(step=NamedSharding(mesh, P()),
+                                 m=pshard, v=pshard)
+        return StepPlan(step, (params_shape, opt_shape, batch),
+                        (pshard, oshard, dlrm_batch_shardings(mesh)),
+                        donate=(0, 1), static_desc=f"dlrm train B{B}")
+
+    if spec.kind == "recsys_serve":
+        def step(params, batch):
+            return dlrm_forward(cfg, params, batch)
+        return StepPlan(step, (params_shape, batch),
+                        (pshard, dlrm_batch_shardings(mesh)),
+                        static_desc=f"dlrm serve B{B}")
+
+    # retrieval: 1 query vs n_candidates
+    C = pad_to(spec.dim("n_candidates"), 2048)
+    batch = dict(dense=_sds((B, cfg.n_dense), jnp.float32),
+                 sparse=_sds((B, cfg.n_sparse, L), jnp.int32),
+                 labels=_sds((B,), jnp.int32),
+                 candidates=_sds((C, cfg.bot_mlp[-1]), jnp.float32))
+
+    def step(params, batch):
+        return retrieval_score(cfg, params, batch)
+
+    bshard = dlrm_batch_shardings(mesh, with_candidates=True)
+    if B == 1:  # can't shard batch 1
+        for k in ("dense", "sparse", "labels"):
+            bshard[k] = _rep(mesh, batch[k])
+    return StepPlan(step, (params_shape, batch), (pshard, bshard),
+                    static_desc=f"dlrm retrieval C{C}")
+
+
+# ----------------------------------------------------------------- CCA ---
+
+def _cca_plan(bundle, spec, mesh) -> StepPlan:
+    from repro.configs.cca_paper import engine_config_for
+    from repro.core.apps import BFS
+    from repro.core.engine import run_chunk_body
+    from repro.core.state import init_state
+    ecfg = dataclasses.replace(engine_config_for(spec), chunk=8)
+    state_shape = jax.eval_shape(functools.partial(init_state, ecfg))
+
+    def step(state):
+        return run_chunk_body(ecfg, BFS, state)
+
+    sshard = cca_state_shardings(mesh, state_shape)
+    return StepPlan(step, (state_shape,), (sshard,), donate=(0,),
+                    static_desc=f"cca {ecfg.height}x{ecfg.width} "
+                                f"x{ecfg.chunk}cyc")
+
+
+# ------------------------------------------------------------- dispatch --
+
+def build_plan(bundle: ArchBundle, spec: ShapeSpec, mesh,
+               lm_overrides=None) -> StepPlan:
+    dist_ctx.set_dist_mesh(mesh)
+    kind = spec.kind
+    if kind == "lm_train":
+        return _lm_train_plan(bundle, spec, mesh, lm_overrides)
+    if kind == "lm_prefill":
+        return _lm_prefill_plan(bundle, spec, mesh, lm_overrides)
+    if kind == "lm_decode":
+        return _lm_decode_plan(bundle, spec, mesh, lm_overrides)
+    if kind.startswith("gnn"):
+        return _gnn_train_plan(bundle, spec, mesh)
+    if kind.startswith("recsys"):
+        return _dlrm_plan(bundle, spec, mesh)
+    if kind == "cca_stream":
+        return _cca_plan(bundle, spec, mesh)
+    raise ValueError(kind)

@@ -1,0 +1,117 @@
+"""End-to-end fault-tolerant training driver.
+
+Runs REAL steps (CPU-sized by default; pass --arch/--preset for bigger).
+Integrates every production component: deterministic resumable data
+pipeline, AdamW, atomic+async checkpointing, straggler watchdog, optional
+int8 gradient compression (inter-pod axis), crash-restart resume.
+
+  PYTHONPATH=src python -m repro.launch.train --steps 100 \
+      --ckpt-dir /tmp/ckpt --preset lm100m
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import LMBatchSpec, lm_batch
+from repro.models.transformer import LMConfig, init_lm_params, lm_loss
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+from repro.optim.compression import (compress_with_feedback, decompress,
+                                     init_residuals)
+from repro.train.checkpoint import Checkpointer
+from repro.train.elastic import StepWatchdog
+
+PRESETS = {
+    # ~100M-param model (deliverable b) — run on real accelerators;
+    # CPU CI uses lm_tiny.
+    "lm100m": LMConfig(name="lm100m", n_layers=12, d_model=768, n_heads=12,
+                       n_kv_heads=4, d_ff=2048, vocab=32768, remat=False),
+    "lm_tiny": LMConfig(name="lm_tiny", n_layers=2, d_model=128, n_heads=4,
+                        n_kv_heads=2, d_ff=256, vocab=512, remat=False,
+                        attn_chunk=64),
+}
+
+
+def make_train_step(cfg: LMConfig, opt_cfg: AdamWConfig, compress: bool):
+    @jax.jit
+    def step(params, opt, residuals, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch))(params)
+        if compress:
+            # inter-pod gradient path: int8 + error feedback
+            comp, residuals = compress_with_feedback(grads, residuals)
+            grads = decompress(comp, grads)
+        params, opt, gnorm = adamw_update(opt_cfg, grads, opt, params)
+        return params, opt, residuals, loss, gnorm
+    return step
+
+
+def train(cfg: LMConfig, steps: int, batch: int, seq: int,
+          ckpt_dir: str | None, ckpt_every: int = 50, compress: bool = False,
+          watchdog_s: float = 0.0, log_every: int = 10, seed: int = 0):
+    opt_cfg = AdamWConfig(total_steps=steps)
+    params = init_lm_params(cfg, jax.random.PRNGKey(seed))
+    opt = init_adamw(params)
+    residuals = init_residuals(params) if compress else \
+        jax.tree.map(lambda x: jnp.zeros((), jnp.float32), params)
+    bspec = LMBatchSpec(batch=batch, seq_len=seq, vocab=cfg.vocab, seed=seed)
+    start = 0
+    ck = Checkpointer(ckpt_dir) if ckpt_dir else None
+    if ck and ck.latest_step() is not None:
+        (params, opt, residuals), extra, start = ck.restore(
+            (params, opt, residuals))
+        print(f"[train] resumed from step {start} ({extra})")
+    step_fn = make_train_step(cfg, opt_cfg, compress)
+    wd = StepWatchdog(watchdog_s) if watchdog_s > 0 else None
+    losses = []
+    t0 = time.time()
+    for s in range(start, steps):
+        if wd:
+            wd.arm(s)
+        b = {k: jnp.asarray(v) for k, v in lm_batch(bspec, s).items()}
+        params, opt, residuals, loss, gnorm = step_fn(
+            params, opt, residuals, b)
+        if wd:
+            wd.disarm()
+        losses.append(float(loss))
+        if s % log_every == 0 or s == steps - 1:
+            dt = time.time() - t0
+            print(f"[train] step {s} loss {float(loss):.4f} "
+                  f"gnorm {float(gnorm):.3f} ({dt:.1f}s)")
+        if ck and (s + 1) % ckpt_every == 0:
+            ck.save_async(s + 1, (params, opt, residuals),
+                          extra=dict(loss=float(loss)))
+    if ck:
+        ck.wait()
+        ck.save(steps, (params, opt, residuals),
+                extra=dict(loss=losses[-1]))
+    return params, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="lm_tiny", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--watchdog-s", type=float, default=0.0)
+    args = ap.parse_args()
+    cfg = PRESETS[args.preset]
+    _, losses = train(cfg, args.steps, args.batch, args.seq,
+                      args.ckpt_dir, args.ckpt_every, args.compress,
+                      args.watchdog_s)
+    print(f"[train] done. first loss {losses[0]:.4f} -> "
+          f"last {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Shared model building blocks (pure JAX, framework-free)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in or shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def mlp_init(key, sizes, dtype=jnp.float32):
+    """Plain MLP params: list of (W, b)."""
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [
+        dict(w=dense_init(ks[i], (sizes[i], sizes[i + 1]), dtype=dtype),
+             b=jnp.zeros((sizes[i + 1],), dtype))
+        for i in range(len(sizes) - 1)
+    ]
+
+
+def mlp_apply(params, x, act=jax.nn.relu, final_act=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"].astype(x.dtype) + lyr["b"].astype(x.dtype)
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def count_params(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))

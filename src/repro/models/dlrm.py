@@ -1,0 +1,133 @@
+"""DLRM (RM2-class): sparse embedding bags -> dot interaction -> MLPs.
+
+JAX has no native EmbeddingBag: lookups are ``jnp.take`` +
+``jax.ops.segment_sum`` over per-bag offsets — built here as part of the
+system (see also the scalar-prefetch Pallas kernel in
+kernels/embedding_bag for the TPU hot path).
+
+Embedding tables are row-sharded over the 'model' mesh axis: a lookup is
+routed to the shard that owns the row — the paper's "send work to data"
+principle applied to recsys (DESIGN §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab_sizes: tuple = ()          # len == n_sparse
+    lookups_per_field: int = 4       # multi-hot bag size (RM2-style)
+    bot_mlp: tuple = (512, 256, 64)
+    top_mlp: tuple = (512, 256, 1)
+    interaction: str = "dot"
+    compute_dtype: Any = jnp.float32
+
+    def resolved_vocabs(self) -> tuple:
+        if self.vocab_sizes:
+            return self.vocab_sizes
+        # Criteo-like mix: a few huge tables, many small.  All sizes are
+        # multiples of 512 so tables row-shard evenly on any mesh axis.
+        base = [33_554_432, 8_388_608, 4_194_304, 1_048_576, 524_288,
+                131_072, 65_536, 16_384, 4_096, 1_024]
+        return tuple(base[i % len(base)] for i in range(self.n_sparse))
+
+    def n_params(self) -> int:
+        emb = sum(self.resolved_vocabs()) * self.embed_dim
+        sizes = [self.n_dense, *self.bot_mlp]
+        bot = sum(sizes[i] * sizes[i + 1] + sizes[i + 1]
+                  for i in range(len(sizes) - 1))
+        n_vec = self.n_sparse + 1
+        d_int = n_vec * (n_vec - 1) // 2 + self.bot_mlp[-1]
+        sizes = [d_int, *self.top_mlp]
+        top = sum(sizes[i] * sizes[i + 1] + sizes[i + 1]
+                  for i in range(len(sizes) - 1))
+        return emb + bot + top
+
+
+def init_dlrm_params(cfg: DLRMConfig, key):
+    ks = jax.random.split(key, 3 + cfg.n_sparse)
+    vocabs = cfg.resolved_vocabs()
+    tables = [dense_init(ks[i], (v, cfg.embed_dim), cfg.embed_dim)
+              for i, v in enumerate(vocabs)]
+    n_vec = cfg.n_sparse + 1
+    d_int = n_vec * (n_vec - 1) // 2 + cfg.bot_mlp[-1]
+    return dict(
+        tables=tables,
+        bot=mlp_init(ks[-2], [cfg.n_dense, *cfg.bot_mlp]),
+        top=mlp_init(ks[-1], [d_int, *cfg.top_mlp]),
+    )
+
+
+def embedding_bag(table, indices, weights=None, combiner="sum"):
+    """table: [V, D]; indices: [B, L] -> [B, D].
+
+    The manual EmbeddingBag: gather rows, reduce the bag axis.  With the
+    table row-sharded over 'model', XLA turns the gather into an
+    all-gather-free dynamic-slice + psum combine.
+    """
+    rows = jnp.take(table, indices, axis=0)         # [B, L, D]
+    if weights is not None:
+        rows = rows * weights[..., None]
+    out = rows.sum(axis=1)
+    if combiner == "mean":
+        out = out / indices.shape[1]
+    return out
+
+
+def dlrm_forward(cfg: DLRMConfig, params, batch):
+    """batch: dense [B, n_dense] f32; sparse [B, n_sparse, L] i32."""
+    cd = cfg.compute_dtype
+    dense, sparse = batch["dense"], batch["sparse"]
+    B = dense.shape[0]
+    x_bot = mlp_apply(params["bot"], dense.astype(cd), final_act=True)
+    embs = [embedding_bag(params["tables"][f].astype(cd), sparse[:, f])
+            for f in range(cfg.n_sparse)]
+    vecs = jnp.stack([x_bot] + embs, axis=1)        # [B, F+1, D]
+    if cfg.interaction == "dot":
+        z = jnp.einsum("bfd,bgd->bfg", vecs, vecs)
+        iu, ju = np.triu_indices(vecs.shape[1], k=1)
+        inter = z[:, iu, ju]                        # [B, F(F+1)/2]
+    else:
+        raise ValueError(cfg.interaction)
+    top_in = jnp.concatenate([x_bot, inter], axis=-1)
+    return mlp_apply(params["top"], top_in)[:, 0]   # logits [B]
+
+
+def dlrm_loss(cfg: DLRMConfig, params, batch):
+    logits = dlrm_forward(cfg, params, batch)
+    y = batch["labels"].astype(jnp.float32)
+    z = logits.astype(jnp.float32)
+    # sigmoid BCE with logits
+    loss = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return loss.mean()
+
+
+# ---------------- retrieval (two-tower scoring) ----------------
+
+def retrieval_score(cfg: DLRMConfig, params, batch):
+    """Score one (or few) queries against a large candidate set.
+
+    batch: dense [B, n_dense], sparse [B, n_sparse, L],
+           candidates [C, D] — returns top-100 (scores, ids).
+    """
+    cd = cfg.compute_dtype
+    dense, sparse = batch["dense"], batch["sparse"]
+    x_bot = mlp_apply(params["bot"], dense.astype(cd), final_act=True)
+    embs = [embedding_bag(params["tables"][f].astype(cd), sparse[:, f])
+            for f in range(cfg.n_sparse)]
+    user = x_bot + sum(embs)                        # [B, D] user tower
+    cand = batch["candidates"].astype(cd)           # [C, D]
+    scores = user @ cand.T                          # batched dot  [B, C]
+    return jax.lax.top_k(scores, 100)

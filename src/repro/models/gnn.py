@@ -1,0 +1,245 @@
+"""GNN model zoo: GCN, GatedGCN, MeshGraphNet, GraphCast.
+
+All four assigned GNN architectures share the bulk message-passing
+substrate (graph/segment_ops).  Each model is a (init, forward) pair over
+a `Graph` batch:
+
+    Graph(x [N,Dx], edge_index [2,E], e [E,De] | None, n_nodes, ...)
+
+GraphCast is the encoder-processor-decoder variant: grid nodes are encoded
+onto an icosahedral multimesh, `n_layers` MeshGraphNet-style blocks run on
+the mesh, and the result is decoded back to the grid (arXiv:2212.12794).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.segment_ops import (gather_src, scatter_mean, scatter_sum,
+                                     spmm, sym_norm_coeff)
+from repro.models.common import dense_init, layer_norm, mlp_apply, mlp_init
+
+
+def icosphere_sizes(refinement: int) -> tuple[int, int]:
+    """(n_mesh_nodes, n_multimesh_directed_edges) for refinement r."""
+    n = 10 * 4 ** refinement + 2
+    e = sum(60 * 4 ** l for l in range(refinement + 1))
+    return n, e
+
+
+class Graph(NamedTuple):
+    x: jax.Array                  # [N, Dx] node features
+    edge_index: jax.Array         # [2, E]
+    e: Any = None                 # [E, De] edge features (optional)
+    # GraphCast only: the mesh graph + cross graphs
+    mesh_edge_index: Any = None   # [2, Em] mesh<->mesh
+    g2m_edge_index: Any = None    # [2, Eg2m] grid->mesh
+    m2g_edge_index: Any = None    # [2, Em2g] mesh->grid
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str = "gnn"
+    kind: str = "gcn"             # gcn | gatedgcn | meshgraphnet | graphcast
+    n_layers: int = 2
+    d_hidden: int = 16
+    d_in: int = 1433
+    d_out: int = 7
+    d_edge_in: int = 0
+    aggregator: str = "mean"
+    mlp_layers: int = 2           # meshgraphnet MLP depth
+    mesh_refinement: int = 6      # graphcast icosphere refinement
+    n_vars: int = 227             # graphcast input variables
+    dropout: float = 0.0
+    compute_dtype: Any = jnp.float32
+
+    def n_params(self) -> int:
+        import jax.random as jr
+        p = init_gnn_params(self, jr.PRNGKey(0))
+        from repro.models.common import count_params
+        return count_params(p)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_gnn_params(cfg: GNNConfig, key):
+    k = iter(jax.random.split(key, 16 + 8 * cfg.n_layers))
+    D = cfg.d_hidden
+    if cfg.kind == "gcn":
+        sizes = [cfg.d_in] + [D] * (cfg.n_layers - 1) + [cfg.d_out]
+        return dict(w=[dense_init(next(k), (sizes[i], sizes[i + 1]))
+                       for i in range(cfg.n_layers)],
+                    b=[jnp.zeros((sizes[i + 1],)) for i in range(cfg.n_layers)])
+    if cfg.kind == "gatedgcn":
+        layers = []
+        for _ in range(cfg.n_layers):
+            layers.append(dict(
+                A=dense_init(next(k), (D, D)), B=dense_init(next(k), (D, D)),
+                C=dense_init(next(k), (D, D)), U=dense_init(next(k), (D, D)),
+                V=dense_init(next(k), (D, D)),
+                ln_h=jnp.ones((D,)), ln_hb=jnp.zeros((D,)),
+                ln_e=jnp.ones((D,)), ln_eb=jnp.zeros((D,))))
+        return dict(
+            embed_h=dense_init(next(k), (cfg.d_in, D)),
+            embed_e=dense_init(next(k), (max(cfg.d_edge_in, 1), D)),
+            layers=layers,
+            readout=dense_init(next(k), (D, cfg.d_out)))
+    if cfg.kind == "meshgraphnet":
+        def mgn_mlp(din):
+            sizes = [din] + [D] * (cfg.mlp_layers - 1) + [D]
+            return mlp_init(next(k), sizes)
+        layers = [dict(edge=mgn_mlp(3 * D), node=mgn_mlp(2 * D),
+                       ln_e=jnp.ones((D,)), ln_eb=jnp.zeros((D,)),
+                       ln_h=jnp.ones((D,)), ln_hb=jnp.zeros((D,)))
+                  for _ in range(cfg.n_layers)]
+        return dict(
+            enc_node=mlp_init(next(k), [cfg.d_in, D, D]),
+            enc_edge=mlp_init(next(k), [max(cfg.d_edge_in, 1), D, D]),
+            layers=layers,
+            dec=mlp_init(next(k), [D, D, cfg.d_out]))
+    if cfg.kind == "graphcast":
+        def mlp2(din, dout=None):
+            return mlp_init(next(k), [din, D, dout or D])
+        layers = [dict(edge=mlp2(3 * D), node=mlp2(2 * D))
+                  for _ in range(cfg.n_layers)]
+        return dict(
+            enc_grid=mlp2(cfg.d_in),
+            enc_mesh=mlp2(3),                  # mesh static features (xyz)
+            g2m_edge=mlp2(4), m2g_edge=mlp2(4), mesh_edge=mlp2(4),
+            g2m=dict(edge=mlp2(3 * D), node=mlp2(2 * D)),
+            layers=layers,
+            m2g=dict(edge=mlp2(3 * D), node=mlp2(2 * D)),
+            dec=mlp2(D, cfg.d_out))
+    raise ValueError(cfg.kind)
+
+
+# --------------------------------------------------------------------------
+# forwards
+# --------------------------------------------------------------------------
+
+def _interaction_block(lp, h_src, h_dst, e, edge_index, n_dst):
+    """MeshGraphNet block: edge MLP + node MLP with residuals."""
+    m = jnp.concatenate([e, h_src[edge_index[0]], h_dst[edge_index[1]]], -1)
+    e2 = e + mlp_apply(lp["edge"], m, act=jax.nn.relu)
+    agg = scatter_sum(e2, edge_index, n_dst)
+    h2 = h_dst + mlp_apply(lp["node"], jnp.concatenate([h_dst, agg], -1),
+                           act=jax.nn.relu)
+    return h2, e2
+
+
+def gnn_forward(cfg: GNNConfig, params, g: Graph):
+    cd = cfg.compute_dtype
+    n = g.x.shape[0]
+    if cfg.kind == "gcn":
+        from repro.dist.ctx import get_dist_mesh
+        mesh = get_dist_mesh()
+        coeff = sym_norm_coeff(g.edge_index, n)
+        h = g.x.astype(cd)
+        for i in range(cfg.n_layers):
+            h = h @ params["w"][i] + params["b"][i]
+            if mesh is not None:
+                # owner-partitioned edges: one bf16 all-gather per layer,
+                # local scatter (no all-reduce) — §Perf gcn-cora iteration
+                from repro.graph.partition import spmm_partitioned
+                agg = spmm_partitioned(h, g.edge_index, n, coeff, mesh)
+            else:
+                agg = spmm(h, g.edge_index, n, coeff, "sum")
+            h = agg.astype(cd) + h  # + self loop
+            if i < cfg.n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+    if cfg.kind == "gatedgcn":
+        h = g.x.astype(cd) @ params["embed_h"]
+        e_in = g.e if g.e is not None else \
+            jnp.ones((g.edge_index.shape[1], 1), cd)
+        e = e_in.astype(cd) @ params["embed_e"]
+        for lp in params["layers"]:
+            hs, hd = h[g.edge_index[0]], h[g.edge_index[1]]
+            e_new = hs @ lp["A"] + hd @ lp["B"] + e @ lp["C"]
+            eta = jax.nn.sigmoid(e_new)
+            num = scatter_sum(eta * (hs @ lp["V"]), g.edge_index, n)
+            den = scatter_sum(eta, g.edge_index, n)
+            h_new = h @ lp["U"] + num / (den + 1e-6)
+            h = h + jax.nn.relu(layer_norm(h_new, lp["ln_h"], lp["ln_hb"]))
+            e = e + jax.nn.relu(layer_norm(e_new, lp["ln_e"], lp["ln_eb"]))
+        return h @ params["readout"]
+    if cfg.kind == "meshgraphnet":
+        h = mlp_apply(params["enc_node"], g.x.astype(cd))
+        e_in = g.e if g.e is not None else \
+            jnp.ones((g.edge_index.shape[1], 1), cd)
+        e = mlp_apply(params["enc_edge"], e_in.astype(cd))
+        for lp in params["layers"]:
+            h2, e2 = _interaction_block(lp, h, h, e, g.edge_index, n)
+            h = layer_norm(h2, lp["ln_h"], lp["ln_hb"])
+            e = layer_norm(e2, lp["ln_e"], lp["ln_eb"])
+        return mlp_apply(params["dec"], h)
+    if cfg.kind == "graphcast":
+        return _graphcast_forward(cfg, params, g)
+    raise ValueError(cfg.kind)
+
+
+def _graphcast_forward(cfg: GNNConfig, params, g: Graph):
+    """Encoder (grid->mesh) / processor (mesh) / decoder (mesh->grid)."""
+    cd = cfg.compute_dtype
+    n_grid = g.x.shape[0]
+    n_mesh = icosphere_sizes(cfg.mesh_refinement)[0]  # static
+    h_grid = mlp_apply(params["enc_grid"], g.x.astype(cd))
+    # static mesh features: use 3 pseudo-coordinates derived from index
+    mi = jnp.arange(n_mesh, dtype=cd)[:, None]
+    mesh_feat = jnp.concatenate([jnp.sin(mi * 0.01), jnp.cos(mi * 0.01),
+                                 mi / max(n_mesh, 1)], axis=-1)
+    h_mesh = mlp_apply(params["enc_mesh"], mesh_feat)
+
+    def edge_feat(ei, n_a, n_b):
+        d = (ei[0].astype(cd) / max(n_a, 1) -
+             ei[1].astype(cd) / max(n_b, 1))[:, None]
+        return jnp.concatenate([d, jnp.abs(d), jnp.sin(d), jnp.cos(d)], -1)
+
+    # grid -> mesh encoder block (bipartite interaction)
+    e_g2m = mlp_apply(params["g2m_edge"], edge_feat(g.g2m_edge_index,
+                                                    n_grid, n_mesh))
+    m = jnp.concatenate([e_g2m, h_grid[g.g2m_edge_index[0]],
+                         h_mesh[g.g2m_edge_index[1]]], -1)
+    e2 = e_g2m + mlp_apply(params["g2m"]["edge"], m)
+    agg = scatter_sum(e2, g.g2m_edge_index, n_mesh)
+    h_mesh = h_mesh + mlp_apply(params["g2m"]["node"],
+                                jnp.concatenate([h_mesh, agg], -1))
+    # processor on the multimesh
+    e_mesh = mlp_apply(params["mesh_edge"], edge_feat(g.mesh_edge_index,
+                                                      n_mesh, n_mesh))
+    for lp in params["layers"]:
+        h_mesh, e_mesh = _interaction_block(lp, h_mesh, h_mesh, e_mesh,
+                                            g.mesh_edge_index, n_mesh)
+    # mesh -> grid decoder block
+    e_m2g = mlp_apply(params["m2g_edge"], edge_feat(g.m2g_edge_index,
+                                                    n_mesh, n_grid))
+    m = jnp.concatenate([e_m2g, h_mesh[g.m2g_edge_index[0]],
+                         h_grid[g.m2g_edge_index[1]]], -1)
+    e2 = e_m2g + mlp_apply(params["m2g"]["edge"], m)
+    agg = scatter_sum(e2, g.m2g_edge_index, n_grid)
+    h_grid = h_grid + mlp_apply(params["m2g"]["node"],
+                                jnp.concatenate([h_grid, agg], -1))
+    return mlp_apply(params["dec"], h_grid)
+
+
+def gnn_loss(cfg: GNNConfig, params, batch):
+    """Node-level loss: classification (int labels) or regression (float)."""
+    g = batch["graph"]
+    out = gnn_forward(cfg, params, g)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if jnp.issubdtype(labels.dtype, jnp.integer):
+        logp = jax.nn.log_softmax(out.astype(jnp.float32), -1)
+        ll = jnp.take_along_axis(logp, labels[:, None], -1)[:, 0]
+        loss = -ll
+    else:
+        loss = jnp.mean(jnp.square(out.astype(jnp.float32) - labels), -1)
+    if mask is not None:
+        return (loss * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss.mean()

@@ -1,0 +1,66 @@
+"""Gradient compression for the slow inter-pod (DCN) axis.
+
+int8 block-quantization with **error feedback** (residual carried to the
+next step) — the standard trick that keeps compressed SGD/Adam convergent
+(1-bit Adam / EF-SGD lineage).  Used by the trainer to compress gradients
+before the inter-pod all-reduce: 4x fewer DCN bytes; ICI reductions stay
+full precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, block=256):
+    """x: any float array -> (q int8, scale f32 per block, pad)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), pad
+
+
+def dequantize_int8(q, scale, pad, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compress_with_feedback(grads, residuals, block=256):
+    """Returns (compressed repr, new residuals).
+
+    residuals: pytree like grads (running quantization error).
+    """
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s, pad = quantize_int8(gf, block)
+        deq = dequantize_int8(q, s, pad, gf.shape)
+        return (q, s, pad), gf - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = tdef.unflatten([o[0] for o in outs])
+    new_res = tdef.unflatten([o[1] for o in outs])
+    return comp, new_res
+
+
+def decompress(comp, grads_like):
+    def one(c, g):
+        q, s, pad = c
+        return dequantize_int8(q, s, pad, g.shape).astype(g.dtype)
+    flat_c, tdef = jax.tree.flatten(grads_like)
+    flat = tdef.flatten_up_to(comp)
+    return tdef.unflatten([one(c, g)
+                           for c, g in zip(flat, flat_c)])
+
+
+def init_residuals(grads_like):
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

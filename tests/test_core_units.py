@@ -1,0 +1,94 @@
+"""Unit tests for the message-driven engine's building blocks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rings
+from repro.core.alloc import choose_alloc_cell, vicinity_offsets
+from repro.core.config import EngineConfig
+from repro.core.msg import (TB_AQ_SELF, TB_CHAN_E, TB_CHAN_N, TB_CHAN_S,
+                            TB_CHAN_W, f2i, i2f, make_msg)
+from repro.core.routing import yx_target_buffer
+
+
+def test_msg_roundtrip():
+    for v in (0.0, 1.0, -3.5, 1e9, 2.5e-4):
+        assert float(i2f(f2i(v))) == np.float32(v)
+
+
+def test_make_msg_shape():
+    m = make_msg(1, jnp.arange(4), 7)
+    assert m.shape == (4, 5)
+    assert int(m[2, 1]) == 2 and int(m[0, 2]) == 7
+
+
+def test_ring_push_pop_fifo():
+    buf = jnp.zeros((2, 4, 5), jnp.int32)
+    cnt = jnp.zeros((2,), jnp.int32)
+    head = jnp.zeros((2,), jnp.int32)
+    msgs = [make_msg(1, i, i * 10) for i in range(3)]
+    for m in msgs:
+        buf, cnt = rings.ring_push(buf, cnt, head,
+                                   jnp.broadcast_to(m, (2, 5)),
+                                   jnp.array([True, False]))
+    assert int(cnt[0]) == 3 and int(cnt[1]) == 0
+    outs = []
+    for _ in range(3):
+        outs.append(np.asarray(rings.ring_peek(buf, head))[0])
+        cnt, head = rings.ring_pop(cnt, head, 4, jnp.array([True, False]))
+    assert [o[1] for o in outs] == [0, 1, 2]  # FIFO order
+    assert int(cnt[0]) == 0
+
+
+def test_ring_wraparound():
+    buf = jnp.zeros((1, 2, 5), jnp.int32)
+    cnt = jnp.zeros((1,), jnp.int32)
+    head = jnp.zeros((1,), jnp.int32)
+    t = jnp.array([True])
+    for i in range(5):  # push/pop interleaved past capacity
+        buf, cnt = rings.ring_push(buf, cnt, head, make_msg(1, i)[None], t)
+        got = int(rings.ring_peek(buf, head)[0, 1])
+        assert got == i
+        cnt, head = rings.ring_pop(cnt, head, 2, t)
+
+
+def test_yx_routing_vertical_first():
+    cfg = EngineConfig(height=4, width=4, n_vertices=16)
+    r = jnp.array(1)
+    c = jnp.array(1)
+    # dst below and right -> go S first (vertical first)
+    assert int(yx_target_buffer(cfg, jnp.array(3 * 4 + 3), r, c)) == TB_CHAN_S
+    assert int(yx_target_buffer(cfg, jnp.array(0 * 4 + 3), r, c)) == TB_CHAN_N
+    # same row -> horizontal
+    assert int(yx_target_buffer(cfg, jnp.array(1 * 4 + 3), r, c)) == TB_CHAN_E
+    assert int(yx_target_buffer(cfg, jnp.array(1 * 4 + 0), r, c)) == TB_CHAN_W
+    # arrived
+    assert int(yx_target_buffer(cfg, jnp.array(1 * 4 + 1), r, c)) == TB_AQ_SELF
+
+
+def test_vicinity_offsets_bound():
+    offs = vicinity_offsets(2)
+    assert len(offs) == 24
+    assert (np.abs(offs).max(axis=1) <= 2).all()
+    assert (np.abs(offs).max(axis=1) >= 1).all()
+
+
+@pytest.mark.parametrize("policy", ["vicinity", "random"])
+def test_choose_alloc_cell_in_range(policy):
+    cfg = EngineConfig(height=8, width=8, n_vertices=64, allocator=policy)
+    rows = jnp.tile(jnp.arange(8, dtype=jnp.int32)[:, None], (1, 8))
+    cols = jnp.tile(jnp.arange(8, dtype=jnp.int32)[None, :], (8, 1))
+    for rot in range(5):
+        cells = np.asarray(choose_alloc_cell(cfg, rows, cols,
+                                             jnp.full((8, 8), rot, jnp.int32)))
+        assert ((cells >= 0) & (cells < 64)).all()
+        if policy == "vicinity":
+            tr, tc = cells // 8, cells % 8
+            cheb = np.maximum(np.abs(tr - np.asarray(rows)),
+                              np.abs(tc - np.asarray(cols)))
+            assert (cheb <= cfg.vicinity_hops).all()
+            # ring excludes self unless clipped at the border
+            interior = ((np.asarray(rows) >= 2) & (np.asarray(rows) < 6)
+                        & (np.asarray(cols) >= 2) & (np.asarray(cols) < 6))
+            assert (cheb[interior] >= 1).all()

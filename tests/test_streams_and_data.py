@@ -1,0 +1,83 @@
+"""Stream generators, neighbor sampler, data-pipeline determinism."""
+import numpy as np
+
+from repro.data.graphs import NeighborSampler, sampled_subgraph_sizes
+from repro.data.pipeline import (LMBatchSpec, RecSysBatchSpec, lm_batch,
+                                 recsys_batch)
+from repro.graph.streams import StreamSpec, make_stream, sbm_edges
+
+
+def test_sbm_edges_unique_and_sized():
+    spec = StreamSpec(n_vertices=200, n_edges=1500, seed=4)
+    e = sbm_edges(spec)
+    assert e.shape == (1500, 2)
+    assert (e[:, 0] != e[:, 1]).all()
+    keys = set(map(tuple, e.tolist()))
+    assert len(keys) == 1500  # unique
+
+
+def test_edge_stream_partitions_everything():
+    spec = StreamSpec(n_vertices=100, n_edges=600, increments=10, seed=1)
+    incs = make_stream(spec)
+    assert len(incs) == 10
+    sizes = [len(x) for x in incs]
+    assert max(sizes) - min(sizes) <= 1          # ~equal (paper Table 1)
+    assert sum(sizes) == 600
+
+
+def test_snowball_stream_grows():
+    spec = StreamSpec(n_vertices=100, n_edges=600, increments=5,
+                      sampling="snowball", seed=2)
+    incs = make_stream(spec)
+    sizes = [len(x) for x in incs]
+    assert sum(sizes) == 600
+    assert sizes[-1] > sizes[0]                  # growing (paper Table 1)
+
+
+def test_neighbor_sampler_shapes_and_edges():
+    rng = np.random.default_rng(0)
+    n = 500
+    src = rng.integers(0, n, 4000).astype(np.int32)
+    dst = rng.integers(0, n, 4000).astype(np.int32)
+    s = NeighborSampler(n, np.stack([src, dst]))
+    seeds = rng.integers(0, n, 32).astype(np.int64)
+    out = s.sample(seeds, fanout=(5, 3))
+    n_nodes, n_edges = sampled_subgraph_sizes(
+        dict(batch_nodes=32, fanout=(5, 3)))
+    assert out["node_ids"].shape == (n_nodes,)
+    assert out["edge_index"].shape == (2, n_edges)
+    # edges point child -> parent, parents come earlier in the node list
+    assert (out["edge_index"][0] > out["edge_index"][1]).all()
+    assert out["edge_index"].max() < n_nodes
+
+
+def test_pipeline_determinism():
+    spec = LMBatchSpec(batch=4, seq_len=32, vocab=1000, seed=9)
+    a = lm_batch(spec, 17)
+    b = lm_batch(spec, 17)
+    c = lm_batch(spec, 18)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert (a["tokens"] != c["tokens"]).any()
+    rs = RecSysBatchSpec(batch=8, n_dense=4, n_sparse=3, lookups=2,
+                         vocab_sizes=(64, 32, 16), seed=3)
+    x = recsys_batch(rs, 5)
+    y = recsys_batch(rs, 5)
+    np.testing.assert_array_equal(x["sparse"], y["sparse"])
+    assert x["sparse"].shape == (8, 3, 2)
+    for f, v in enumerate((64, 32, 16)):
+        assert x["sparse"][:, f].max() < v
+
+
+def test_adamw_optimizes_quadratic():
+    import jax
+    import jax.numpy as jnp
+    from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+    cfg = AdamWConfig(lr=0.1, warmup_steps=5, total_steps=200,
+                      weight_decay=0.0)
+    params = dict(w=jnp.array([3.0, -2.0]))
+    opt = init_adamw(params)
+    loss = lambda p: jnp.sum(jnp.square(p["w"] - 1.0))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(cfg, g, opt, params)
+    assert float(loss(params)) < 1e-2
