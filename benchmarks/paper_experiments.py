@@ -140,6 +140,67 @@ def bench_activation(scale="ci", sampling="edge", out_npz=None):
     return dict(ingest=summarize(trace_i), ingest_bfs=summarize(trace_b))
 
 
+# ------------------- rhizome vs chain on skewed streams -------------------
+
+SKEW_SCALES = {
+    "ci": dict(height=8, width=8, n_vertices=256, n_edges=4096),
+    "mid": dict(height=16, width=16, n_vertices=2048, n_edges=32_768),
+    "paper": dict(height=32, width=32, n_vertices=16_384, n_edges=262_144),
+}
+
+
+def bench_skew(scale="ci", rhizome_caps=(1, 2, 4), verify=True):
+    """Power-law (R-MAT) stream: serial ghost chain (rhizome_cap=1) vs
+    multi-root rhizome vertex objects (DESIGN §4.5).
+
+    The R-MAT hubs exceed ``edge_cap`` many times over, so the chain
+    design serializes every hub insert and bfs broadcast; rhizomes shard
+    the hub over co-equal roots.  Reports cycles-to-quiescence per cap,
+    with exact host-reference verification.
+    """
+    p = SKEW_SCALES[scale]
+    edge_cap = 8
+    spec = StreamSpec(n_vertices=p["n_vertices"], n_edges=p["n_edges"],
+                      increments=4, kind="rmat", seed=2)
+    incs = make_stream(spec)
+    allv = np.concatenate(incs)
+    deg = np.bincount(allv[:, 0], minlength=p["n_vertices"])
+    want = bfs_levels(p["n_vertices"], allv, 0) if verify else None
+    rows = []
+    for R in rhizome_caps:
+        cfg = EngineConfig(
+            height=p["height"], width=p["width"],
+            n_vertices=p["n_vertices"], edge_cap=edge_cap,
+            ghost_slots=max(64, 4 * p["n_edges"]
+                            // (edge_cap * p["height"] * p["width"])),
+            # sized for the R=1 hub pile-up (DESIGN §4.2): every insert
+            # of an R-MAT hub converges on one cell's action queue
+            queue_cap=192, chan_cap=32, futq_cap=8,
+            io_stream_cap=2 ** 20, chunk=512, rhizome_cap=R)
+        eng = StreamingEngine(cfg, "bfs")
+        eng.seed(0, 0.0)
+        cycles = hops = stalls = 0
+        for e in incs:
+            r = eng.run_increment(e, max_cycles=4_000_000)
+            cycles += r.cycles
+            hops += r.hops
+            stalls += r.stalls
+        if verify:
+            got = eng.values(p["n_vertices"])
+            assert (got == want).all(), \
+                f"BFS mismatch vs NetworkX at rhizome_cap={R}"
+        s = eng.vertex_object_stats()
+        rows.append(dict(rhizome_cap=R, cycles=cycles, hops=hops,
+                         stalls=stalls, max_degree=int(deg.max()),
+                         degree_over_edge_cap=round(
+                             float(deg.max()) / edge_cap, 1),
+                         rhizomes=s["rhizomes"],
+                         multi_root_vertices=s["multi_root_vertices"],
+                         max_fanout=s["max_fanout"],
+                         ghosts=s["ghosts"]))
+    return rows
+
+
 # ------------------- engine wall-clock throughput -------------------
 
 def bench_engine_throughput(scale="ci"):

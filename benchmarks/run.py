@@ -46,6 +46,17 @@ def bench_paper(scale: str, only=None) -> None:
                  f'mean_active={s["mean_active"]}',
                  f'peak={s["peak_active"]}',
                  f'util_pct={s["mean_util_pct"]}')
+    if only in (None, "skew"):
+        for r in pe.bench_skew(scale):
+            _csv("skew_rhizome", f'rhizome_cap={r["rhizome_cap"]}',
+                 f'cycles={r["cycles"]}', f'hops={r["hops"]}',
+                 f'stalls={r["stalls"]}',
+                 f'max_degree={r["max_degree"]}',
+                 f'deg_over_edge_cap={r["degree_over_edge_cap"]}',
+                 f'rhizomes={r["rhizomes"]}',
+                 f'multi_root={r["multi_root_vertices"]}',
+                 f'max_fanout={r["max_fanout"]}',
+                 f'ghosts={r["ghosts"]}')
     if only in (None, "throughput"):
         t = pe.bench_engine_throughput(scale)
         _csv("engine_throughput", f'cycles={t["cycles"]}',
@@ -109,7 +120,7 @@ def main() -> None:
     ap.add_argument("--scale", default="ci",
                     choices=["ci", "mid", "paper"])
     ap.add_argument("--only", default=None,
-                    help="increments|energy|allocator|activation|"
+                    help="increments|energy|allocator|activation|skew|"
                          "throughput|kernels|roofline")
     args = ap.parse_args()
     pathlib.Path("results").mkdir(exist_ok=True)

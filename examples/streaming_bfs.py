@@ -20,21 +20,29 @@ def main() -> None:
     ap.add_argument("--edges", type=int, default=20_000)
     ap.add_argument("--sampling", default="edge",
                     choices=["edge", "snowball"])
+    ap.add_argument("--kind", default="sbm", choices=["sbm", "rmat"],
+                    help="rmat = power-law skew (pair with --rhizomes)")
+    ap.add_argument("--rhizomes", type=int, default=1,
+                    help="co-equal roots per vertex (DESIGN §4.5)")
     args = ap.parse_args()
 
     spec = StreamSpec(n_vertices=args.vertices, n_edges=args.edges,
-                      increments=10, sampling=args.sampling, seed=1)
+                      increments=10, sampling=args.sampling, seed=1,
+                      kind=args.kind)
     incs = make_stream(spec)
     cfg = EngineConfig(height=32, width=32, n_vertices=args.vertices,
                        edge_cap=8,
                        ghost_slots=max(32, 3 * args.vertices // 1024),
-                       io_stream_cap=2 ** 20, chunk=512)
+                       io_stream_cap=2 ** 20, chunk=512,
+                       rhizome_cap=args.rhizomes)
     eng = StreamingEngine(cfg, "bfs")
     eng.seed(0, 0.0)
 
     total_cycles = 0
-    print(f"{args.sampling}-sampled stream, {args.vertices} vertices, "
-          f"{sum(len(e) for e in incs)} edges, 10 increments")
+    print(f"{args.kind}/{args.sampling}-sampled stream, "
+          f"{args.vertices} vertices, "
+          f"{sum(len(e) for e in incs)} edges, 10 increments, "
+          f"rhizome_cap={args.rhizomes}")
     for i, e in enumerate(incs):
         r = eng.run_increment(e, max_cycles=2_000_000)
         total_cycles += r.cycles
@@ -53,7 +61,7 @@ def main() -> None:
     print(f"total: {total_cycles} cycles = "
           f"{ENERGY.cycles_to_us(total_cycles):.1f} us @1GHz, "
           f"~{uj:.0f} uJ (Table 2 analogue)")
-    print("ghost chain stats:", eng.ghost_chain_stats())
+    print("vertex object stats:", eng.vertex_object_stats())
 
 
 if __name__ == "__main__":

@@ -16,6 +16,53 @@ import jax.numpy as jnp
 from repro.core.config import EngineConfig
 
 
+def rhizome_cell(cfg: EngineConfig, vid, k):
+    """Cell of rhizome root ``k`` of vertex ``vid`` (static placement).
+
+    Root 0 is the classic canonical root (cell ``vid % n_cells``); roots
+    k >= 1 are scattered ``k * rhizome_stride`` cells away so the co-equal
+    roots of a hub vertex spread over the mesh (DESIGN §4.5).
+    """
+    vid = jnp.asarray(vid, jnp.int32)
+    k = jnp.asarray(k, jnp.int32)
+    return (vid + k * cfg.rhizome_stride) % cfg.n_cells
+
+
+def rhizome_addr(cfg: EngineConfig, vid, k):
+    """Global address of rhizome root ``k`` of vertex ``vid``.
+
+    Slot layout: rhizome k of the vertex with local index j = vid // n_cells
+    occupies slot ``k * root_slots + j`` of its cell, so the primary region
+    [0, rhizome_cap * root_slots) is statically partitioned and the ghost
+    allocator starts above it.
+    """
+    vid = jnp.asarray(vid, jnp.int32)
+    k = jnp.asarray(k, jnp.int32)
+    slot = k * cfg.root_slots + vid // cfg.n_cells
+    return rhizome_cell(cfg, vid, k) * cfg.slots + slot
+
+
+def rhizome_rcs(cfg: EngineConfig, vid, k):
+    """Host-side placement: (row, col, slot) of rhizome root ``k`` of
+    ``vid``.  Pure-python/numpy arithmetic (no jnp) so the engine's host
+    readback, seeding and stats share one copy of the layout formulas."""
+    cell = (vid + k * cfg.rhizome_stride) % cfg.n_cells
+    return (cell // cfg.width, cell % cfg.width,
+            k * cfg.root_slots + vid // cfg.n_cells)
+
+
+def rhizome_owner_vid(cfg: EngineConfig, cellid, slot):
+    """Inverse placement map: vertex id owning primary ``slot`` of ``cellid``.
+
+    Only meaningful for slots in the primary region; used by a pending
+    rhizome root to address OP_LINK_RHIZOME at its canonical root.
+    """
+    k = slot // cfg.root_slots
+    j = slot % cfg.root_slots
+    home = (cellid - k * cfg.rhizome_stride) % cfg.n_cells
+    return j * cfg.n_cells + home
+
+
 def vicinity_offsets(hops: int) -> np.ndarray:
     """(dy, dx) ring offsets with Chebyshev distance in [1, hops]."""
     offs = [(dy, dx)

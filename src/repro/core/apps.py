@@ -9,7 +9,12 @@ scratch (the paper's central claim for dynamic BFS):
   propagate_on_insert(vals)                       # Listing 4 line 7 condition
 
 ``forward`` down the ghost chain always carries the slot's post-relax value
-itself (same logical vertex, same value) — DESIGN §4.4.
+itself (same logical vertex, same value) — DESIGN §4.4.  The same property
+makes the rhizome broadcast sound (DESIGN §4.5): an ``OP_RHIZOME_FWD``
+carrying a canonical root's post-relax value is just another monotone
+relax at each co-equal sibling root, so any interleaving of inserts,
+broadcasts and link-acks converges to the same fixpoint, and the host
+readback can ``combine`` (min) over the roots at any instant.
 """
 from __future__ import annotations
 
@@ -17,6 +22,7 @@ import dataclasses
 from typing import Callable
 
 import jax.numpy as jnp
+import numpy as np
 
 INF = jnp.float32(1e9)
 
@@ -32,6 +38,9 @@ class DiffusionApp:
     propagate_on_insert: Callable
     init_val: float = 1e9
     n_vals: int = 1
+    # host-side merge of one vertex's values across its rhizome roots;
+    # must agree with relax's fixpoint direction (min for the bundled apps)
+    combine: Callable = np.minimum
 
 
 def _min_relax(vals, incoming):

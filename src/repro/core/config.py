@@ -21,6 +21,8 @@ class EngineConfig:
     n_vertices: int = 1024        # logical vertices (roots, round-robin placed)
     edge_cap: int = 8             # edges per RPVO node before spilling to ghost
     ghost_slots: int = 64         # ghost slots per cell (beyond root slots)
+    rhizome_cap: int = 1          # co-equal roots per vertex (DESIGN §4.5);
+                                  # 1 = classic single root + serial ghost chain
 
     # --- queues / buffers ---
     queue_cap: int = 32           # per-cell action queue
@@ -51,8 +53,21 @@ class EngineConfig:
         return int(math.ceil(self.n_vertices / self.n_cells))
 
     @property
+    def primary_slots(self) -> int:
+        # statically reserved rhizome-root region: slot k*root_slots + j is
+        # rhizome root k of the vertex with local index j (DESIGN §4.5)
+        return self.rhizome_cap * self.root_slots
+
+    @property
     def slots(self) -> int:
-        return self.root_slots + self.ghost_slots
+        return self.primary_slots + self.ghost_slots
+
+    @property
+    def rhizome_stride(self) -> int:
+        # cell offset between consecutive rhizome roots of one vertex; odd so
+        # it is coprime with the (typically power-of-two) cell count and the
+        # roots scatter over the mesh instead of clustering in one row
+        return max(1, self.n_cells // self.rhizome_cap) | 1
 
     @property
     def io_cells(self) -> int:
@@ -62,7 +77,9 @@ class EngineConfig:
     def aq_reserve(self) -> int:
         # Reserved action-queue slots so the active action's *local*
         # emissions always complete -> no self-deadlock (see DESIGN 4.2).
-        return self.edge_cap + 2
+        # With rhizomes an app action additionally broadcasts to up to
+        # rhizome_cap-1 sibling roots, any of which may be local.
+        return self.edge_cap + 2 + (self.rhizome_cap - 1)
 
     @property
     def sys_reserve(self) -> int:
@@ -75,6 +92,25 @@ class EngineConfig:
     def validate(self) -> None:
         assert self.height >= 2 and self.width >= 2
         assert self.queue_cap > self.aq_reserve + self.sys_reserve + 1, \
-            "queue too small for reserves"
+            "queue too small for reserves (DESIGN §4.2); with rhizome_cap=" \
+            f"{self.rhizome_cap} need queue_cap > " \
+            f"{self.aq_reserve + self.sys_reserve + 1}"
         assert self.n_cells * self.slots < 2**31, "address overflows int32"
         assert self.edge_cap >= 1 and self.futq_cap >= 2
+        assert 1 <= self.rhizome_cap <= self.n_cells, \
+            "rhizome_cap must be in [1, n_cells]"
+        # rhizome roots of one vertex must land on distinct cells: the k-th
+        # root lives at (v + k*stride) % n_cells (DESIGN §4.5)
+        cells = {(k * self.rhizome_stride) % self.n_cells
+                 for k in range(self.rhizome_cap)}
+        assert len(cells) == self.rhizome_cap, \
+            "rhizome_stride collides rhizome roots on one cell; pick a " \
+            "rhizome_cap with distinct k*stride mod n_cells"
+        if self.rhizome_cap > 1:
+            # a rhizome activation drains up to futq_cap deferred inserts
+            # back onto the LOCAL action queue in one action; the drain
+            # must fit the local-emission reserve (DESIGN §4.2/§4.5)
+            assert self.futq_cap <= self.aq_reserve, \
+                f"futq_cap={self.futq_cap} exceeds the local-emission " \
+                f"reserve {self.aq_reserve}; shrink futq_cap or raise " \
+                "edge_cap/rhizome_cap"

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.alloc import rhizome_rcs
 from repro.core.apps import APPS, DiffusionApp
 from repro.core.config import EngineConfig
 from repro.core.exec_stage import phase0_stage, staging_stage
@@ -134,17 +135,20 @@ class StreamingEngine:
 
     # -- seeding (e.g. the BFS source vertex gets level 0 pre-stream) --
     def seed(self, vid: int, value: float, val_idx: int = 0):
+        """Host-write a value into EVERY rhizome root of ``vid`` so the
+        co-equal roots start value-synced (DESIGN §4.5)."""
         cfg = self.cfg
-        cell = vid % cfg.n_cells
-        r, c, s = cell // cfg.width, cell % cfg.width, vid // cfg.n_cells
-        self.state = self.state._replace(
-            vals=self.state.vals.at[r, c, s, val_idx].set(value))
+        vals = self.state.vals
+        for k in range(cfg.rhizome_cap):
+            r, c, s = rhizome_rcs(cfg, vid, k)
+            vals = vals.at[r, c, s, val_idx].set(value)
+        self.state = self.state._replace(vals=vals)
 
     # -- stream one increment of edges and run to quiescence --
     def run_increment(self, edges: np.ndarray,
                       max_cycles: int | None = None) -> IncrementResult:
         cfg = self.cfg
-        self.state = load_stream(cfg, self.state, edges)
+        self.state, spill = load_stream(cfg, self.state, edges)
         act, flt = [], []
         hops = execs = stalls = allocs = 0
         cycles = 0
@@ -164,6 +168,12 @@ class StreamingEngine:
                 n = int(np.argmax(q))  # first quiescent cycle in chunk
                 act.append(a[:n]); flt.append(f[:n])
                 cycles += n
+                if len(spill):
+                    # io_stream_cap overflow residue: the loaded prefix is
+                    # fully consumed at quiescence, so the next pass has
+                    # the whole IO capacity again (DESIGN §4.2)
+                    self.state, spill = load_stream(cfg, self.state, spill)
+                    continue
                 break
             act.append(a); flt.append(f)
             cycles += cfg.chunk
@@ -183,6 +193,13 @@ class StreamingEngine:
                     f"(>= aq_reserve+sys_reserve+8 = "
                     f"{cfg.aq_reserve + cfg.sys_reserve + 8}) — see "
                     "DESIGN.md §4.2 buffer-sizing rule.")
+        if len(spill):
+            # never drop work silently: the cycle limit ran out before the
+            # spilled residue could be re-loaded and ingested
+            raise RuntimeError(
+                f"cycle limit {limit} exhausted with {len(spill)} spilled "
+                "edges not yet ingested; raise max_cycles or io_stream_cap "
+                "(DESIGN.md §4.2).")
         hops = int(self.state.stat_hops)
         execs = int(self.state.stat_exec)
         stalls = int(self.state.stat_stall)
@@ -197,28 +214,66 @@ class StreamingEngine:
             in_flight_per_cycle=np.concatenate(flt) if flt else np.zeros(0, np.int32),
             hops=hops, execs=execs, stalls=stalls, allocs=allocs)
 
-    # -- read back application values from RPVO roots --
+    # -- read back application values from the vertex objects --
     def values(self, n: int | None = None, val_idx: int = 0) -> np.ndarray:
+        """Min-reduce over every rhizome root of each vertex.
+
+        The canonical root always holds the tightest value (all external
+        relaxes land there; siblings only receive its snapshots), so for
+        the bundled monotone-min apps the reduce equals the canonical
+        value — kept as a reduce so readback stays correct even mid-run.
+        """
         cfg = self.cfg
         n = n or cfg.n_vertices
-        vids = jnp.arange(n, dtype=jnp.int32)
-        cell = vids % cfg.n_cells
-        r, c, s = cell // cfg.width, cell % cfg.width, vids // cfg.n_cells
-        return np.asarray(self.state.vals[r, c, s, val_idx])
+        vids = np.arange(n, dtype=np.int64)
+        vals = np.asarray(self.state.vals[..., val_idx])
+        out = None
+        for k in range(cfg.rhizome_cap):
+            r, c, s = rhizome_rcs(cfg, vids, k)
+            v = vals[r, c, s]
+            out = v if out is None else self.app.combine(out, v)
+        return out
 
-    def ghost_chain_stats(self) -> dict:
-        """Diagnostics: ghost usage + locality (validates Fig. 5 policies)."""
+    def vertex_object_stats(self) -> dict:
+        """Diagnostics over the hierarchical vertex objects: ghost usage +
+        locality (validates Fig. 5 policies) plus rhizome fan-out and the
+        spread of co-equal roots over the mesh (DESIGN §4.5)."""
         cfg = self.cfg
         st = self.state
         gs = np.asarray(st.gstate)
         ga = np.asarray(st.gaddr)
-        used = int(np.sum(np.asarray(st.nfree) - cfg.root_slots))
+        used = int(np.sum(np.asarray(st.nfree) - cfg.primary_slots))
+        out = dict(ghosts=used, mean_hops=0.0, max_hops=0,
+                   rhizomes=0, multi_root_vertices=0, max_fanout=1,
+                   mean_rhizome_hops=0.0)
         have = gs == 2
-        if not have.any():
-            return dict(ghosts=used, mean_hops=0.0, max_hops=0)
-        rr, cc, _ = np.nonzero(have)
-        tgt_cell = ga[have] // cfg.slots
-        tr, tc = tgt_cell // cfg.width, tgt_cell % cfg.width
-        d = np.abs(rr - tr) + np.abs(cc - tc)
-        return dict(ghosts=used, mean_hops=float(d.mean()),
-                    max_hops=int(d.max()))
+        if have.any():
+            rr, cc, _ = np.nonzero(have)
+            tgt_cell = ga[have] // cfg.slots
+            tr, tc = tgt_cell // cfg.width, tgt_cell % cfg.width
+            d = np.abs(rr - tr) + np.abs(cc - tc)
+            out.update(mean_hops=float(d.mean()), max_hops=int(d.max()))
+        if cfg.rhizome_cap > 1:
+            on = np.asarray(st.rhz_on)          # [H,W,S]
+            vids = np.arange(cfg.n_vertices, dtype=np.int64)
+            fan = np.ones(cfg.n_vertices, np.int64)
+            dists = []
+            r0, c0, _ = rhizome_rcs(cfg, vids, 0)
+            for k in range(1, cfg.rhizome_cap):
+                r, c, s = rhizome_rcs(cfg, vids, k)
+                act = on[r, c, s]
+                fan += act
+                if act.any():
+                    dists.append((np.abs(r - r0) + np.abs(c - c0))[act])
+            out.update(
+                rhizomes=int(fan.sum() - cfg.n_vertices),
+                multi_root_vertices=int((fan > 1).sum()),
+                max_fanout=int(fan.max()),
+                mean_rhizome_hops=(float(np.concatenate(dists).mean())
+                                   if dists else 0.0))
+        return out
+
+    def ghost_chain_stats(self) -> dict:
+        """Back-compat alias of :meth:`vertex_object_stats` (pre-rhizome
+        name); returns the same dict."""
+        return self.vertex_object_stats()

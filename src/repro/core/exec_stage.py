@@ -7,12 +7,22 @@ active-action registers: an action occupies its cell for ``1 + T`` cycles —
 one mutate cycle (phase 0) plus one cycle per emission, with backpressure
 stalls when the target buffer is full.
 
-Handlers implemented (paper Listings 4-6 + system actions of Fig. 3/4):
+Handlers implemented (paper Listings 4-6 + system actions of Fig. 3/4,
+plus the rhizome protocol of DESIGN §4.5):
 
-  OP_INSERT_EDGE  insert-edge-action with the full ghost/future protocol
-  OP_APP          the application action (bfs-action et al.)
+  OP_INSERT_EDGE  insert-edge-action with the full ghost/future protocol;
+                  at an inactive rhizome root it defers on the slot's
+                  future queue and requests activation (OP_LINK_RHIZOME)
+  OP_APP          the application action (bfs-action et al.); a changed
+                  relax at a canonical root with linked siblings broadcasts
+                  OP_RHIZOME_FWD to every co-equal root in parallel
   OP_ALLOC        remote ghost allocation (vicinity/random allocator)
   OP_SET_FUTURE   continuation return: set future, drain deferred queue
+  OP_RHIZOME_FWD  sibling value sync: relax locally, diffuse along the
+                  local edge shard + own ghost chain; activates a pending
+                  rhizome root and drains its deferred inserts (link-ack)
+  OP_LINK_RHIZOME activation request at the canonical root: mark the
+                  vertex multi-root and ack with the current value
 
 Implementation note (§Perf, cca cell): every slot access is a one-hot
 ``where`` over the slot axis — never a scatter/gather with index arrays —
@@ -25,11 +35,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import rings
-from repro.core.alloc import choose_alloc_cell
+from repro.core.alloc import (choose_alloc_cell, rhizome_addr,
+                              rhizome_owner_vid)
 from repro.core.apps import DiffusionApp
 from repro.core.config import EngineConfig
 from repro.core.msg import (MSG_WORDS, OP_ALLOC, OP_APP, OP_INSERT_EDGE,
-                            OP_SET_FUTURE, TB_AQ_SELF, f2i, i2f, make_msg)
+                            OP_LINK_RHIZOME, OP_RHIZOME_FWD, OP_SET_FUTURE,
+                            TB_AQ_SELF, f2i, i2f, make_msg)
 from repro.core.routing import yx_target_buffer
 from repro.core.state import G_NULL, G_PENDING, G_SET, MachineState
 
@@ -80,10 +92,15 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
 
     is_app = op == OP_APP
     is_sf = op == OP_SET_FUTURE
+    is_rf = op == OP_RHIZOME_FWD
+    is_appl = is_app | is_rf       # app-like: edge diffusion + ghost forward
 
-    # ---- emission for OP_APP: per-edge diffusion, then ghost forward ----
+    # ---- emission for OP_APP / OP_RHIZOME_FWD: (rf only) deferred-insert
+    #      drains, per-edge diffusion, (app only) sibling-rhizome
+    #      broadcasts, then ghost forward ----
+    kd = k - st.cdrain             # emission index past the drains (rf)
     ne = sel(st.nedges, slot)
-    ek = jnp.minimum(k, E - 1)
+    ek = jnp.clip(kd, 0, E - 1)
     ohSE = (_oh(slot, S)[..., None] & _oh(ek, E)[..., None, :])  # [H,W,S,E]
     e_dst = jnp.sum(jnp.where(ohSE, st.edst, 0), axis=(2, 3))
     e_w = jnp.sum(jnp.where(ohSE, st.ew, 0.0), axis=(2, 3))
@@ -91,8 +108,19 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     gs = sel(st.gstate, slot)
     ga = sel(st.gaddr, slot)
     app_fwd_msg = make_msg(OP_APP, ga, f2i(st.cemit))
-    app_is_fwd = is_app & (k >= ne)
-    app_msg = jnp.where(app_is_fwd[..., None], app_fwd_msg, app_edge_msg)
+    # sibling broadcast window [ne, ne + n_bcast) — canonical roots of
+    # multi-root vertices only (phase0 accounted for it in cT)
+    rss = sel(st.rstate, slot)
+    n_bcast = jnp.where(is_app & (slot < cfg.root_slots) & (rss == G_SET),
+                        cfg.rhizome_cap - 1, 0)
+    cellid = rows * W + cols
+    v_self = slot * cfg.n_cells + cellid           # vid owning a root slot
+    sib = jnp.clip(kd - ne + 1, 1, cfg.rhizome_cap - 1 if cfg.rhizome_cap > 1
+                   else 1)
+    bc_msg = make_msg(OP_RHIZOME_FWD, rhizome_addr(cfg, v_self, sib),
+                      f2i(st.cemit))
+    is_bcast = is_app & (kd >= ne) & (kd < ne + n_bcast)
+    appl_is_fwd = is_appl & (kd >= ne + n_bcast) & (k >= st.cdrain)
 
     # ---- emission for OP_SET_FUTURE: retarget head of the future queue,
     #      then (last) the coalesced deferred app-forward, if any ----
@@ -112,13 +140,22 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     sf_msg = jnp.where(sf_from_fq[..., None], sf_fq_msg,
                        make_msg(OP_APP, ga, f2i(fwd_here)))
 
-    emis = jnp.where(is_app[..., None], app_msg,
+    # ---- rf activation drain: re-inject a deferred insert at this (now
+    #      active) rhizome root — it is local by construction ----
+    rf_drain = is_rf & (k < st.cdrain)
+    drain_msg = make_msg(OP_INSERT_EDGE, dst, fq_e[..., 1], fq_e[..., 2])
+
+    appl_msg = jnp.where(rf_drain[..., None], drain_msg,
+                         jnp.where(appl_is_fwd[..., None], app_fwd_msg,
+                                   jnp.where(is_bcast[..., None], bc_msg,
+                                             app_edge_msg)))
+    emis = jnp.where(is_appl[..., None], appl_msg,
                      jnp.where(is_sf[..., None], sf_msg, st.cout))
 
     # ---- app ghost-forward onto a *pending* future: coalesce into the
     #      per-slot monotone forward register (never stalls — the future
     #      LCO merges dependent continuations, DESIGN §4.4) ----
-    to_reg = active & app_is_fwd & (gs == G_PENDING)
+    to_reg = active & appl_is_fwd & (gs == G_PENDING)
     ohreg = _oh(slot, S, to_reg)
     fwd_val = jnp.where(ohreg, jnp.minimum(st.fwd_val, st.cemit[..., None]),
                         st.fwd_val)
@@ -147,11 +184,11 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
         ch_n = ch_n.at[:, :, d].set(nn)
         ok_total |= ok
 
-    # ---- SET_FUTURE bookkeeping on successful stages ----
-    sf_pop = ok_total & sf_from_fq
-    n2, h2 = rings.ring_pop(fqn_cur, fqh_cur, cfg.futq_cap, sf_pop)
-    fq_n = put(st.fq_n, slot, n2, sf_pop)
-    fq_head = put(st.fq_head, slot, h2, sf_pop)
+    # ---- SET_FUTURE / rf-drain bookkeeping on successful stages ----
+    fq_pop = ok_total & (sf_from_fq | rf_drain)
+    n2, h2 = rings.ring_pop(fqn_cur, fqh_cur, cfg.futq_cap, fq_pop)
+    fq_n = put(st.fq_n, slot, n2, fq_pop)
+    fq_head = put(st.fq_head, slot, h2, fq_pop)
     sf_clear = ok_total & sf_from_fwd
     fwd_val = put(fwd_val, slot, jnp.float32(1e9), sf_clear)
     fwd_pending = fwd_pending & ~_oh(slot, S, sf_clear)
@@ -192,28 +229,42 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     ne = sel(st.nedges, slot)
     gs = sel(st.gstate, slot)
     fqn = sel(st.fq_n, slot)
+    rs = sel(st.rstate, slot)
+    on_s = sel(st.rhz_on, slot)
 
     is_ins = op == OP_INSERT_EDGE
     is_app = op == OP_APP
     is_alc = op == OP_ALLOC
     is_sf = op == OP_SET_FUTURE
+    is_rf = op == OP_RHIZOME_FWD
+    is_lr = op == OP_LINK_RHIZOME
+
+    # secondary rhizome slots are statically reserved but start inactive;
+    # an insert reaching one before its link-ack must defer (DESIGN §4.5)
+    in_sec = (slot >= cfg.root_slots) & (slot < cfg.primary_slots)
+    inactive = in_sec & ~on_s
 
     # ---------------- INSERT-EDGE paths (Listing 6) ----------------
     room = ne < E
-    p_room = is_ins & room
-    p_fwd = is_ins & ~room & (gs == G_SET)
-    p_defer = is_ins & ~room & (gs == G_PENDING)
-    p_null = is_ins & ~room & (gs == G_NULL)
+    p_room = is_ins & ~inactive & room
+    p_fwd = is_ins & ~inactive & ~room & (gs == G_SET)
+    p_defer = is_ins & ~inactive & ~room & (gs == G_PENDING)
+    p_null = is_ins & ~inactive & ~room & (gs == G_NULL)
+    # rhizome growth: first insert at an inactive root requests the link,
+    # later ones just defer on the same future queue (Fig. 4 machinery)
+    p_rlink = is_ins & inactive & (rs == G_NULL)
+    p_rdef = is_ins & inactive & (rs == G_PENDING)
 
     # the only infeasible phase-0: deferred insert with a full future
     # queue.  The head is ROTATED to the queue tail (costs this cell's
     # cycle) — the paper's runtime "schedules other tasks", so a blocked
     # action never wedges the FIFO in front of the set-future it waits on.
-    feasible = ~(p_defer & (fqn >= FQ))
+    feasible = ~((p_defer | p_rlink | p_rdef) & (fqn >= FQ))
     pop = has & feasible
     rotate = has & ~feasible
     p_room &= pop; p_fwd &= pop; p_defer &= pop; p_null &= pop
-    is_app &= pop; is_alc &= pop; is_sf &= pop
+    p_rlink &= pop; p_rdef &= pop
+    is_app &= pop; is_alc &= pop; is_sf &= pop; is_rf &= pop; is_lr &= pop
 
     # -- room: insert the edge into this RPVO node
     eidx = jnp.minimum(ne, E - 1)
@@ -231,7 +282,8 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     fwd_out = make_msg(OP_INSERT_EDGE, ga_cur, a0, a1)
 
     # -- defer: enqueue the insert on the pending future (Fig. 4 step 3)
-    push_mask = p_defer | p_null            # null also defers the edge itself
+    # (rhizome-pending slots reuse the same queue: Fig. 4 step 3 again)
+    push_mask = p_defer | p_null | p_rlink | p_rdef
     fqh = sel(st.fq_head, slot)
     tailq = (fqh + fqn) % FQ
     ohq = (_oh(slot, S, push_mask)[..., None]
@@ -247,12 +299,49 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     arot = st.arot + p_null.astype(jnp.int32)
     null_out = make_msg(OP_ALLOC, tgt_cell * S, dst, f2i(vals_s[..., 0]))
 
-    # ---------------- APP action (Listing 5) ----------------
+    # -- rlink: mark pending, request activation at the canonical root
+    rstate = put(st.rstate, slot, G_PENDING, p_rlink)
+    owner = rhizome_owner_vid(cfg, cellid, slot)
+    owner_root = (owner % cfg.n_cells) * S + owner // cfg.n_cells
+    rlink_out = make_msg(OP_LINK_RHIZOME, owner_root, cellid * S + slot)
+
+    # ---------------- APP / RHIZOME-FWD relax (Listing 5) ----------------
+    relaxing = is_app | is_rf
     new_vals, changed = app.relax(vals_s, i2f(a0))
-    changed = changed & is_app
-    vals = put(st.vals, slot, new_vals, is_app)
-    app_T = jnp.where(changed, ne + (gs != G_NULL).astype(jnp.int32), 0)
+    changed = changed & relaxing
+    vals = put(st.vals, slot, new_vals, relaxing)
+    # a changed relax at a canonical root of a multi-root vertex also
+    # broadcasts to the R-1 sibling rhizomes — in parallel, replacing the
+    # serial forward walk of the chain design (DESIGN §4.5).  The root
+    # learns it is multi-root when it handles the first OP_LINK_RHIZOME.
+    n_bcast = jnp.where(is_app & (slot < cfg.root_slots) & (rs == G_SET),
+                        cfg.rhizome_cap - 1, 0)
+    app_T = jnp.where(changed,
+                      ne + n_bcast + (gs != G_NULL).astype(jnp.int32), 0)
     cemit_new = new_vals[..., 0]
+
+    # -- rhizome-fwd extras: activate a pending/inactive sibling root and
+    #    drain its deferred inserts back onto the local action queue.  The
+    #    gstate gate keeps ghost-protocol deferrals (G_PENDING) parked for
+    #    their set-future instead of bouncing them through the queue.
+    rf_act = is_rf & in_sec & ~on_s
+    rhz_on = jnp.where(_oh(slot, S, rf_act), True, st.rhz_on)
+    rstate = put(rstate, slot, G_SET, rf_act)
+    # the ne == 0 gate makes the §4.2 local-emission bound locally
+    # provable: a draining rf emits <= futq_cap (<= aq_reserve) and a
+    # diffusing rf emits <= edge_cap + 1, never both.  (Protocol-wise a
+    # slot with fq entries is either ghost-pending or pre-activation with
+    # zero edges, so the gate never strands an entry.)
+    drain_n = jnp.where(is_rf & (gs != G_PENDING) & (ne == 0), fqn, 0)
+    rf_T = drain_n + jnp.where(is_rf & changed,
+                               ne + (gs != G_NULL).astype(jnp.int32), 0)
+    app_T = jnp.where(is_rf, 0, app_T)
+
+    # ---------------- LINK-RHIZOME (canonical-root handler) ----------
+    # remember the vertex is multi-root; ack with the current value (the
+    # ack is itself an OP_RHIZOME_FWD, so it also syncs the new sibling)
+    rstate = put(rstate, slot, G_SET, is_lr)
+    lr_out = make_msg(OP_RHIZOME_FWD, a0, f2i(vals_s[..., 0]))
 
     # ---------------- ALLOC (system action) ----------------
     alc_room = is_alc & (st.nfree < S)
@@ -282,13 +371,16 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
 
     # ---------------- combine: T, cout, registers, queue pop --------------
     T = (ins_T
-         + jnp.where(p_fwd | p_null | alc_room | alc_full, 1, 0)
-         + app_T + sf_T)
+         + jnp.where(p_fwd | p_null | p_rlink | alc_room | alc_full | is_lr,
+                     1, 0)
+         + app_T + sf_T + rf_T)
     cout = jnp.where(p_room[..., None], ins_out,
             jnp.where(p_fwd[..., None], fwd_out,
              jnp.where(p_null[..., None], null_out,
-              jnp.where(alc_room[..., None], alc_ok_out,
-               jnp.where(alc_full[..., None], alc_fwd_out, st.cout)))))
+              jnp.where(p_rlink[..., None], rlink_out,
+               jnp.where(is_lr[..., None], lr_out,
+                jnp.where(alc_room[..., None], alc_ok_out,
+                 jnp.where(alc_full[..., None], alc_fwd_out, st.cout)))))))
 
     # pop (feasible) or rotate-to-tail (infeasible): head always advances
     move = pop | rotate
@@ -302,15 +394,17 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     cmsg = jnp.where(pop[..., None], m, st.cmsg)
     cphase = jnp.where(pop, 1, st.cphase)
     cT = jnp.where(pop, T, st.cT)
-    cemit = jnp.where(is_app, cemit_new, st.cemit)
+    cemit = jnp.where(is_app | is_rf, cemit_new, st.cemit)
+    cdrain = jnp.where(pop, jnp.where(is_rf, drain_n, 0), st.cdrain)
 
     st = st._replace(
         vals=vals, nedges=nedges, edst=edst, ew=ew, gaddr=gaddr,
-        gstate=gstate, nfree=nfree, fq=fq, fq_n=fq_n, fq_head=fq_head,
+        gstate=gstate, rhz_on=rhz_on, rstate=rstate, nfree=nfree,
+        fq=fq, fq_n=fq_n, fq_head=fq_head,
         fwd_val=fwd_val, fwd_pending=fwd_pending,
         aq=aq, aq_n=aq_n2, aq_head=aq_h2, arot=arot,
         cmsg=cmsg, cvalid=cvalid, cphase=cphase, cT=cT, cemit=cemit,
-        cout=cout,
+        cout=cout, cdrain=cdrain,
         stat_exec=st.stat_exec + jnp.sum(done0.astype(jnp.int32)),
         stat_allocs=st.stat_allocs + jnp.sum(alc_room.astype(jnp.int32)),
         stat_stall=st.stat_stall + jnp.sum(rotate.astype(jnp.int32)))

@@ -13,18 +13,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rings
+from repro.core.alloc import rhizome_addr
 from repro.core.config import EngineConfig
 from repro.core.msg import OP_INSERT_EDGE, TB_AQ_SELF, make_msg
-from repro.core.routing import yx_target_buffer
+from repro.core.routing import manhattan_hops, yx_target_buffer
 from repro.core.state import MachineState, root_addr
 
 
-def load_stream(cfg: EngineConfig, st: MachineState,
-                edges: np.ndarray) -> MachineState:
+def load_stream(cfg: EngineConfig, st: MachineState, edges: np.ndarray):
     """Distribute an increment's edges round-robin over the IO cells.
 
     edges: int32 [m, 3] rows of (src vid, dst vid, weight bits).
     Any residue from a previous increment is preserved (appended after).
+
+    Returns ``(state, spill)``: edges that did not fit the per-IO-cell
+    residual-stream capacity are returned (in arrival order) instead of
+    asserting — the engine re-loads them once the loaded prefix has been
+    consumed (spill-to-next-pass residue, DESIGN §4.2).
     """
     IO, L = cfg.io_cells, cfg.io_stream_cap
     io_edges = np.asarray(st.io_edges)
@@ -38,14 +43,19 @@ def load_stream(cfg: EngineConfig, st: MachineState,
         new_edges[i, :len(rem)] = rem
         new_n[i] = len(rem)
     edges = np.asarray(edges, np.int32).reshape(-1, 3)
+    spill = []
     for k, e in enumerate(edges):
         i = k % IO
-        assert new_n[i] < L, "io_stream_cap too small for this increment"
+        if new_n[i] >= L:
+            spill.append(e)
+            continue
         new_edges[i, new_n[i]] = e
         new_n[i] += 1
-    return st._replace(io_edges=jnp.asarray(new_edges),
-                       io_n=jnp.asarray(new_n),
-                       io_pos=jnp.zeros_like(st.io_pos))
+    st = st._replace(io_edges=jnp.asarray(new_edges),
+                     io_n=jnp.asarray(new_n),
+                     io_pos=jnp.zeros_like(st.io_pos))
+    return st, (np.stack(spill) if spill
+                else np.zeros((0, 3), np.int32))
 
 
 def io_stage(cfg: EngineConfig, st: MachineState, rows, cols):
@@ -54,11 +64,28 @@ def io_stage(cfg: EngineConfig, st: MachineState, rows, cols):
     IO = cfg.io_cells  # == width
     pend = st.io_pos < st.io_n                       # [IO]
     cur = st.io_edges[jnp.arange(IO), jnp.minimum(st.io_pos, cfg.io_stream_cap - 1)]
-    tgt = root_addr(cfg, cur[:, 0])                  # insert at src's RPVO root
-    msg = make_msg(OP_INSERT_EDGE, tgt, root_addr(cfg, cur[:, 1]), cur[:, 2])
 
     r0 = jnp.zeros((IO,), jnp.int32)
     c0 = jnp.arange(IO, dtype=jnp.int32)
+    # Route the insert to the nearest rhizome root of the src vertex,
+    # under a per-IO-cell round-robin preference (DESIGN §4.5): the
+    # rotation shards a hub's inserts evenly over its co-equal roots
+    # (pure nearest would collapse onto whichever root sits closest to
+    # the IO row and re-serialize the hub), while the routing distance
+    # overrides the rotation when another root is more than half a chip
+    # diameter closer.  With rhizome_cap=1 this is exactly the canonical
+    # root.  Edge destinations always name the canonical root: the
+    # application diffusion relaxes there and fans out to siblings.
+    R = cfg.rhizome_cap
+    ks = jnp.arange(R, dtype=jnp.int32)[None, :]
+    cand = rhizome_addr(cfg, cur[:, 0:1], ks)        # [IO, R]
+    dist = manhattan_hops(cfg, cand // S, r0[:, None], c0[:, None])
+    half_diam = max(1, (cfg.height + cfg.width - 2) // 2)
+    pref = (ks - st.io_pos[:, None]) % R             # 0 = rotation favorite
+    best = jnp.argmin(dist + pref * half_diam, axis=1)
+    tgt = jnp.take_along_axis(cand, best[:, None], axis=1)[:, 0]
+    msg = make_msg(OP_INSERT_EDGE, tgt, root_addr(cfg, cur[:, 1]), cur[:, 2])
+
     tb = yx_target_buffer(cfg, tgt // S, r0, c0)     # [IO]
 
     accepted = jnp.zeros((IO,), bool)

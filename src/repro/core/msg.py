@@ -25,7 +25,11 @@ OP_INSERT_EDGE = 1    # args: (edge dst root addr, weight bits, -)
 OP_APP = 2            # args: (value bits, -, -)   the application action (e.g. bfs-action)
 OP_ALLOC = 3          # args: (requester addr, requester value bits, -)
 OP_SET_FUTURE = 4     # args: (new ghost addr, -, -)
-N_OPS = 5
+OP_RHIZOME_FWD = 5    # args: (value bits, -, -)   sibling-rhizome value sync;
+                      # also the link-ack that activates a pending rhizome root
+OP_LINK_RHIZOME = 6   # args: (requester rhizome addr, -, -) sent to the
+                      # canonical root to request activation of a sibling
+N_OPS = 7
 
 # ---- directions (mesh links) ----
 DIR_N, DIR_S, DIR_W, DIR_E = 0, 1, 2, 3

@@ -15,10 +15,20 @@ import jax.numpy as jnp
 
 from repro.core.config import EngineConfig
 from repro.core.msg import (DIR_E, DIR_N, DIR_S, DIR_W, OP_ALLOC,
-                            OP_SET_FUTURE, TB_AQ_SELF, TB_CHAN_E, TB_CHAN_N,
-                            TB_CHAN_S, TB_CHAN_W)
+                            OP_LINK_RHIZOME, OP_RHIZOME_FWD, OP_SET_FUTURE,
+                            TB_AQ_SELF, TB_CHAN_E, TB_CHAN_N, TB_CHAN_S,
+                            TB_CHAN_W)
 from repro.core import rings
 from repro.core.state import MachineState
+
+
+def manhattan_hops(cfg: EngineConfig, dst_cell, rows, cols):
+    """YX-DOR path length (Manhattan hops) from cell (rows, cols) to
+    ``dst_cell``.  Shapes broadcast; the routing-distance metric used by IO
+    cells to pick the *nearest* rhizome root of a vertex (DESIGN §4.5)."""
+    dr = dst_cell // cfg.width
+    dc = dst_cell % cfg.width
+    return jnp.abs(dr - rows) + jnp.abs(dc - cols)
 
 
 def yx_target_buffer(cfg: EngineConfig, dst_cell, rows, cols):
@@ -111,7 +121,13 @@ def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
         # deliver to AQ.  External pushes respect the local-emission
         # reserve; system actions (allocate / set-future) additionally get
         # the sys_reserve headroom so the future protocol always advances.
-        is_sys = (msg_r[..., 0] == OP_ALLOC) | (msg_r[..., 0] == OP_SET_FUTURE)
+        # OP_RHIZOME_FWD doubles as the link-ack that drains deferred
+        # inserts at a pending rhizome root — like SET_FUTURE it must be
+        # able to enter a queue that is closed to application messages.
+        is_sys = ((msg_r[..., 0] == OP_ALLOC)
+                  | (msg_r[..., 0] == OP_SET_FUTURE)
+                  | (msg_r[..., 0] == OP_LINK_RHIZOME)
+                  | (msg_r[..., 0] == OP_RHIZOME_FWD))
         want_aq = occ_r & (tb == TB_AQ_SELF)
         room = jnp.where(is_sys,
                          rings.ring_free(aq_n, Q, cfg.aq_reserve),

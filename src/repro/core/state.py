@@ -1,9 +1,17 @@
 """Machine state: the whole AM-CCA chip as one fixed-shape pytree.
 
-Slot layout per cell: slots ``[0, R)`` are RPVO roots (vertex ``v`` lives at
-cell ``v % n_cells``, slot ``v // n_cells``); slots ``[R, S)`` are ghost
-slots handed out by the allocator.  A global address is
-``addr = cell * S + slot`` (int32).
+Slot layout per cell: slots ``[0, P)`` with ``P = rhizome_cap * root_slots``
+are the statically partitioned rhizome-root region — slot
+``k * root_slots + j`` is rhizome root ``k`` of the vertex with local index
+``j`` (root 0 at cell ``v % n_cells`` is the classic canonical RPVO root).
+Slots ``[P, S)`` are ghost slots handed out by the allocator.  A global
+address is ``addr = cell * S + slot`` (int32).
+
+Secondary rhizome roots (k >= 1) start *inactive* (``rhz_on`` False) and are
+grown on demand by the OP_LINK_RHIZOME protocol (DESIGN §4.5): an insert
+arriving at an inactive root is deferred on the slot's future queue exactly
+like the ghost G_PENDING protocol, and drains when the canonical root's
+value-carrying OP_RHIZOME_FWD ack activates the slot.
 """
 from __future__ import annotations
 
@@ -30,6 +38,8 @@ class MachineState(NamedTuple):
     ew: jax.Array          # [H,W,S,E]  f32  edge weight
     gaddr: jax.Array       # [H,W,S]    i32  ghost address (-1 if none)
     gstate: jax.Array      # [H,W,S]    i32  future state: null/pending/set
+    rhz_on: jax.Array      # [H,W,S]    bool secondary rhizome root is active
+    rstate: jax.Array      # [H,W,S]    i32  rhizome-link state (G_* codes)
     nfree: jax.Array       # [H,W]      i32  next free ghost slot
     # --- future LCO deferred queues [H,W,S,FQ,3]: (op, arg0, arg1) ---
     fq: jax.Array
@@ -53,6 +63,7 @@ class MachineState(NamedTuple):
     cT: jax.Array          # [H,W] i32   total emissions of the active action
     cemit: jax.Array       # [H,W] f32   snapshot of the emission source value
     cout: jax.Array        # [H,W,MSG] i32 precomputed single emission
+    cdrain: jax.Array      # [H,W] i32   deferred-queue drains of active action
     # --- IO cells (streaming ingestion) ---
     io_edges: jax.Array    # [IO, L, 3] i32 (src vid, dst vid, weight bits)
     io_n: jax.Array        # [IO] i32 edges loaded
@@ -82,7 +93,9 @@ def init_state(cfg: EngineConfig, init_vals: float | np.ndarray = 1e9) -> Machin
         ew=jnp.zeros((H, W, S, E), jnp.float32),
         gaddr=jnp.full((H, W, S), -1, jnp.int32),
         gstate=z32(H, W, S),
-        nfree=jnp.full((H, W), cfg.root_slots, jnp.int32),
+        rhz_on=jnp.zeros((H, W, S), bool),
+        rstate=z32(H, W, S),
+        nfree=jnp.full((H, W), cfg.primary_slots, jnp.int32),
         fq=z32(H, W, S, FQ, 3),
         fq_n=z32(H, W, S), fq_head=z32(H, W, S),
         fwd_val=jnp.full((H, W, S), INF),
@@ -95,6 +108,7 @@ def init_state(cfg: EngineConfig, init_vals: float | np.ndarray = 1e9) -> Machin
         cphase=z32(H, W), cT=z32(H, W),
         cemit=jnp.zeros((H, W), jnp.float32),
         cout=z32(H, W, MSG_WORDS),
+        cdrain=z32(H, W),
         io_edges=z32(IO, L, 3), io_n=z32(IO), io_pos=z32(IO),
         arot=z32(H, W),
         cycle=jnp.int32(0), stat_hops=jnp.int32(0), stat_exec=jnp.int32(0),

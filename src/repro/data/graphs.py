@@ -110,7 +110,6 @@ class NeighborSampler:
             idx = self.ptr[frontier][:, None] + r % np.maximum(deg, 1)[:, None]
             nb = np.where(deg[:, None] > 0, self.nbr[idx],
                           frontier[:, None])
-            child_base = base + len(frontier) if base else len(frontier)
             child_base = sum(len(x) for x in nodes)
             parents_local = np.arange(base, base + len(frontier))
             edges_src.append((child_base

@@ -30,6 +30,13 @@ class StreamSpec:
     sampling: str = "edge"      # "edge" | "snowball"
     seed: int = 0
     symmetric: bool = False     # insert both directions
+    kind: str = "sbm"           # "sbm" | "rmat" (power-law skew)
+    # R-MAT quadrant probabilities (a,b,c; d = 1-a-b-c).  The defaults are
+    # the Graph500 parameters, giving a power-law degree distribution with
+    # heavy hubs — the skewed-stream regime rhizomes target (DESIGN §4.5).
+    rmat_a: float = 0.57
+    rmat_b: float = 0.19
+    rmat_c: float = 0.19
 
 
 def sbm_edges(spec: StreamSpec) -> np.ndarray:
@@ -68,6 +75,57 @@ def sbm_edges(spec: StreamSpec) -> np.ndarray:
                     break
     e = np.asarray(chunks, dtype=np.int64)
     return e.astype(np.int32)
+
+
+def rmat_edges(spec: StreamSpec) -> np.ndarray:
+    """Sample ~n_edges directed edges of an R-MAT (Kronecker) graph.
+
+    Vertices are drawn bit-by-bit through the recursive quadrant matrix
+    [[a, b], [c, d]]; with Graph500 parameters the out-degree distribution
+    is power-law, so a handful of hub vertices receive degrees tens of
+    times ``edge_cap`` — the pathological case for a serial ghost chain.
+    Self-loops are dropped; duplicate edges are kept (they re-arrive in
+    real streams and are legal inserts).
+    """
+    rng = np.random.default_rng(spec.seed)
+    scale = max(1, int(np.ceil(np.log2(max(spec.n_vertices, 2)))))
+    a, b, c = spec.rmat_a, spec.rmat_b, spec.rmat_c
+    d = 1.0 - a - b - c
+    assert d >= 0, "rmat probabilities exceed 1"
+    src = np.zeros(0, np.int64)
+    dst = np.zeros(0, np.int64)
+    while len(src) < spec.n_edges:
+        k = spec.n_edges - len(src) + 1024
+        s = np.zeros(k, np.int64)
+        t = np.zeros(k, np.int64)
+        for _ in range(scale):
+            q = rng.random(k)
+            down = (q >= a + b).astype(np.int64)            # rows c/d
+            right = (((q >= a) & (q < a + b))
+                     | (q >= a + b + c)).astype(np.int64)   # cols b/d
+            s = (s << 1) | down
+            t = (t << 1) | right
+        ok = (s != t) & (s < spec.n_vertices) & (t < spec.n_vertices)
+        src = np.concatenate([src, s[ok]])
+        dst = np.concatenate([dst, t[ok]])
+    src, dst = src[:spec.n_edges], dst[:spec.n_edges]
+    return np.stack([src, dst], axis=1).astype(np.int32)
+
+
+def hub_edges(n_vertices: int, hub: int, degree: int,
+              seed: int = 0) -> np.ndarray:
+    """A single hub of the given out-degree plus a random tail — the
+    minimal skewed stream for pinning rhizome correctness in tests."""
+    rng = np.random.default_rng(seed)
+    dsts = 1 + (np.arange(degree, dtype=np.int64) % (n_vertices - 1))
+    dsts = np.where(dsts == hub, 0, dsts)   # no self-loops
+    e = [np.stack([np.full(degree, hub, np.int64), dsts], axis=1)]
+    # sparse tail so BFS has depth beyond the hub fan-out
+    t_src = rng.integers(0, n_vertices, n_vertices // 2)
+    t_dst = rng.integers(0, n_vertices, n_vertices // 2)
+    ok = t_src != t_dst
+    e.append(np.stack([t_src[ok], t_dst[ok]], axis=1))
+    return np.concatenate(e).astype(np.int32)
 
 
 def edge_sampled_stream(edges: np.ndarray, increments: int,
@@ -126,7 +184,12 @@ def snowball_stream(edges: np.ndarray, increments: int, source: int = 0,
 
 
 def make_stream(spec: StreamSpec) -> list[np.ndarray]:
-    edges = sbm_edges(spec)
+    if spec.kind == "rmat":
+        edges = rmat_edges(spec)
+    elif spec.kind == "sbm":
+        edges = sbm_edges(spec)
+    else:
+        raise ValueError(spec.kind)
     if spec.symmetric:
         edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
     if spec.sampling == "edge":

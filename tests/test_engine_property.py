@@ -4,6 +4,10 @@ streaming dynamic BFS must equal offline BFS, conserve every edge, and
 respect allocator locality.
 """
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see pyproject)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EngineConfig, StreamingEngine

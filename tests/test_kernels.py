@@ -5,7 +5,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade: only the property-based tests skip
+    def given(**kw):
+        return lambda f: pytest.mark.skip(
+            reason="property tests need hypothesis (see pyproject)")(f)
+
+    def settings(**kw):
+        return lambda f: f
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
 
 from repro.kernels.embedding_bag.ops import (embedding_bag,
                                              embedding_bag_reference)

@@ -1,0 +1,147 @@
+"""Rhizomatic vertex objects (DESIGN §4.5): skewed-stream correctness.
+
+A hub vertex whose degree exceeds ``edge_cap * rhizome_cap`` forces both
+the rhizome-link growth protocol and per-root ghost chains.  BFS / SSSP /
+CC must reach the exact host-reference fixpoint for ``rhizome_cap`` 1
+(chain-equivalence pin) and 4 (multi-root), and the multi-root run must
+actually grow co-equal roots.
+"""
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, StreamingEngine
+from repro.core.reference import bfs_levels, cc_labels, sssp_dists
+from repro.graph.streams import StreamSpec, hub_edges, make_stream, rmat_edges
+
+ONE = np.float32(1.0).view(np.int32)
+
+
+def cfg_for(R, **kw):
+    # queue_cap is sized for hub-convergent streams: with a serial chain
+    # (R=1) every hub insert converges on one cell, and the queue must
+    # hold the in-flight pile-up or the §4.2 livelock detector fires
+    base = dict(height=8, width=8, n_vertices=64, edge_cap=4,
+                ghost_slots=32, queue_cap=96, chan_cap=16, futq_cap=8,
+                io_stream_cap=2048, chunk=128, rhizome_cap=R)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def with_weights(e2, w=None):
+    if w is None:
+        wbits = np.full((len(e2), 1), ONE, np.int32)
+    else:
+        wbits = w.astype(np.float32).view(np.int32).reshape(-1, 1)
+    return np.concatenate([e2.astype(np.int32), wbits], axis=1)
+
+
+@pytest.mark.parametrize("R", [1, 4])
+def test_hub_bfs_exact(R):
+    n, deg = 64, 40  # degree > edge_cap * rhizome_cap = 16
+    e2 = hub_edges(n, hub=0, degree=deg, seed=3)
+    edges = with_weights(e2)
+    eng = StreamingEngine(cfg_for(R), "bfs")
+    eng.seed(0, 0.0)
+    eng.run_increment(edges, max_cycles=500_000)
+    np.testing.assert_array_equal(eng.values(n), bfs_levels(n, edges, 0))
+    stats = eng.vertex_object_stats()
+    if R > 1:
+        assert stats["multi_root_vertices"] >= 1
+        assert stats["max_fanout"] > 1
+    else:
+        assert stats["rhizomes"] == 0
+
+
+@pytest.mark.parametrize("R", [1, 4])
+def test_hub_sssp_exact(R):
+    n, deg = 64, 40
+    rng = np.random.default_rng(5)
+    e2 = hub_edges(n, hub=0, degree=deg, seed=5)
+    w = rng.integers(1, 9, len(e2)).astype(np.float32)
+    edges = with_weights(e2, w)
+    eng = StreamingEngine(cfg_for(R), "sssp")
+    eng.seed(0, 0.0)
+    eng.run_increment(edges, max_cycles=500_000)
+    want = sssp_dists(n, e2, w, 0)
+    np.testing.assert_allclose(eng.values(n), want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("R", [1, 4])
+def test_hub_cc_exact(R):
+    n, deg = 64, 40
+    e2 = hub_edges(n, hub=0, degree=deg, seed=7)
+    e2 = np.concatenate([e2, e2[:, ::-1]], axis=0)  # undirected
+    edges = with_weights(e2)
+    eng = StreamingEngine(cfg_for(R), "cc")
+    for v in range(n):
+        eng.seed(v, float(v))
+    eng.run_increment(edges, max_cycles=500_000)
+    np.testing.assert_array_equal(eng.values(n), cc_labels(n, e2))
+
+
+@pytest.mark.parametrize("R", [1, 4])
+def test_edge_conservation_across_rhizomes(R):
+    """No insert is lost or duplicated across co-equal roots + chains."""
+    n, deg = 64, 48
+    e2 = hub_edges(n, hub=0, degree=deg, seed=9)
+    edges = with_weights(e2)
+    eng = StreamingEngine(cfg_for(R), "ingest_only")
+    eng.run_increment(edges, max_cycles=500_000)
+    total = int(np.asarray(eng.state.nedges).sum())
+    assert total == len(edges)
+
+
+def test_rmat_stream_bfs_exact_multiroot():
+    """Power-law (R-MAT) stream over increments, rhizome_cap=4."""
+    spec = StreamSpec(n_vertices=128, n_edges=1024, increments=3,
+                      kind="rmat", seed=11)
+    incs = make_stream(spec)
+    eng = StreamingEngine(cfg_for(4, n_vertices=128, ghost_slots=48), "bfs")
+    eng.seed(0, 0.0)
+    for e in incs:
+        eng.run_increment(e, max_cycles=500_000)
+    allv = np.concatenate(incs)
+    np.testing.assert_array_equal(eng.values(128), bfs_levels(128, allv, 0))
+
+
+def test_rmat_degrees_are_skewed():
+    spec = StreamSpec(n_vertices=256, n_edges=4096, kind="rmat", seed=1)
+    e = rmat_edges(spec)
+    assert len(e) == 4096
+    assert e.min() >= 0 and e.max() < 256
+    deg = np.bincount(e[:, 0], minlength=256)
+    # power-law: the top vertex dwarfs the median degree
+    assert deg.max() >= 8 * max(1, int(np.median(deg)))
+
+
+def test_rhizome_beats_chain_on_skewed_stream():
+    """Acceptance: max degree >= 8x edge_cap -> rhizome_cap=4 reaches
+    quiescence in fewer cycles than the serial chain (rhizome_cap=1)."""
+    n = 64
+    e2 = hub_edges(n, hub=0, degree=8 * 4 * 2, seed=13)  # 8x edge_cap=8
+    edges = with_weights(e2)
+    cycles = {}
+    for R in (1, 4):
+        eng = StreamingEngine(cfg_for(R, edge_cap=8, ghost_slots=48), "bfs")
+        eng.seed(0, 0.0)
+        r = eng.run_increment(edges, max_cycles=500_000)
+        np.testing.assert_array_equal(eng.values(n), bfs_levels(n, edges, 0))
+        cycles[R] = r.cycles
+    assert cycles[4] < cycles[1], cycles
+
+
+def test_load_stream_spill_residue():
+    """io_stream_cap overflow must spill and re-load, not assert."""
+    n = 32
+    rng = np.random.default_rng(17)
+    src = rng.integers(0, n, 600)
+    dst = rng.integers(0, n, 600)
+    ok = src != dst
+    edges = with_weights(np.stack([src[ok], dst[ok]], 1))
+    cfg = cfg_for(1, n_vertices=n, io_stream_cap=16, ghost_slots=48)
+    eng = StreamingEngine(cfg, "bfs")
+    eng.seed(0, 0.0)
+    eng.run_increment(edges, max_cycles=500_000)
+    total = int(np.asarray(eng.state.nedges).sum())
+    assert total == len(edges)
+    np.testing.assert_array_equal(eng.values(n), bfs_levels(n, edges, 0))
