@@ -64,6 +64,23 @@ def bench_paper(scale: str, only=None) -> None:
              f'cell_cycles_per_s={t["cell_cycles_per_s"]}')
 
 
+def bench_dist(scale: str) -> None:
+    """Sharded-CCA chunk throughput at 1/2/4/8 fake host devices."""
+    from benchmarks.dist_scaling import run_scaling
+    failed = []
+    for r in run_scaling(scale):
+        if "error" in r:
+            failed.append(r["devices"])
+            _csv("dist_scaling", f'devices={r["devices"]}', "FAILED",
+                 r["error"][:120].replace("\n", " "))
+            continue
+        _csv("dist_scaling", f'devices={r["devices"]}', f'grid={r["grid"]}',
+             f'cell_cycles_per_s={r["cell_cycles_per_s"]}',
+             f'wall_s={r["wall_s"]}', f'compile_s={r["compile_s"]}')
+    if failed:  # fail loudly so the CI dist-smoke job goes red
+        raise SystemExit(f"bench_dist failed at device counts {failed}")
+
+
 def bench_kernels() -> None:
     import jax
     import numpy as np
@@ -121,7 +138,7 @@ def main() -> None:
                     choices=["ci", "mid", "paper"])
     ap.add_argument("--only", default=None,
                     help="increments|energy|allocator|activation|skew|"
-                         "throughput|kernels|roofline")
+                         "throughput|dist|kernels|roofline")
     args = ap.parse_args()
     pathlib.Path("results").mkdir(exist_ok=True)
     print("benchmark,fields...", flush=True)
@@ -129,7 +146,9 @@ def main() -> None:
         bench_kernels()
     if args.only in (None, "roofline"):
         bench_roofline()
-    if args.only is None or args.only not in ("kernels", "roofline"):
+    if args.only in (None, "dist"):
+        bench_dist(args.scale)
+    if args.only is None or args.only not in ("kernels", "roofline", "dist"):
         bench_paper(args.scale, args.only)
 
 

@@ -1,0 +1,105 @@
+"""JAX version compatibility for the distribution layer.
+
+The repo targets the modern mesh API (``jax.make_mesh(..., axis_types=...)``,
+``jax.set_mesh``, ``jax.shard_map``, ``jax.sharding.AxisType``) but must also
+run on older jax (0.4.x) where those live elsewhere or do not exist:
+
+* ``AxisType``      — tiny stand-in enum when ``jax.sharding`` lacks it
+  (the repo only ever uses ``Auto``, which is the 0.4.x default behavior).
+* ``make_mesh``     — drops the ``axis_types`` kwarg when unsupported.
+* ``use_mesh``      — ``jax.set_mesh`` when available, else the classic
+  ``with mesh:`` resource-env context manager.
+* ``shard_map``     — ``jax.shard_map`` when available, else
+  ``jax.experimental.shard_map.shard_map`` (with ``check_rep=False``: the
+  0.4.x replication checker predates several collective patterns used here).
+
+``install()`` additionally publishes these under the modern names on the
+``jax`` module itself so drivers and subprocess test scripts written against
+the new API run unchanged.  It is idempotent and a no-op on new jax.
+Importing ``repro.dist`` (or any of its submodules) installs the shims.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+
+import jax
+import jax.sharding
+
+
+def _native_axis_type():
+    try:
+        return jax.sharding.AxisType
+    except AttributeError:
+        return None
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` on jax < 0.5."""
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = _native_axis_type() or _AxisType
+
+_NATIVE_MAKE_MESH = jax.make_mesh
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    "axis_types" in inspect.signature(_NATIVE_MAKE_MESH).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates ``axis_types`` on old jax."""
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if _MAKE_MESH_TAKES_AXIS_TYPES and axis_types is not None:
+        kw["axis_types"] = axis_types
+    return _NATIVE_MAKE_MESH(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` (``jax.set_mesh`` or legacy)."""
+    native = getattr(jax, "set_mesh", None)
+    if native is not None and not getattr(native, "_repro_compat", False):
+        return native(mesh)
+
+    @contextlib.contextmanager
+    def _legacy():
+        with mesh:
+            yield mesh
+
+    return _legacy()
+
+
+def shard_map(f, *, mesh=None, in_specs=None, out_specs=None, **kw):
+    """Keyword-compatible ``shard_map`` across jax versions."""
+    native = getattr(jax, "shard_map", None)
+    if native is not None and not getattr(native, "_repro_compat", False):
+        return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw.setdefault("check_rep", False)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def _compat(fn):
+    fn._repro_compat = True
+    return fn
+
+
+def install() -> None:
+    """Publish modern-API names onto ``jax`` for old versions (idempotent)."""
+    if _native_axis_type() is None:
+        jax.sharding.AxisType = AxisType
+    if not _MAKE_MESH_TAKES_AXIS_TYPES and \
+            not getattr(jax.make_mesh, "_repro_compat", False):
+        jax.make_mesh = _compat(make_mesh)
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _compat(use_mesh)
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _compat(shard_map)
+
+
+install()

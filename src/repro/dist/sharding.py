@@ -1,0 +1,186 @@
+"""GSPMD sharding rules for every workload family (DESIGN §5).
+
+The headline map is :func:`cca_state_shardings`: the decentralized
+engine's whole machine state — one fixed-shape pytree of ``[H, W, ...]``
+cell-major arrays — is laid onto the (data, model) device mesh by
+sharding cell ROWS over the data-parallel group and cell COLUMNS over the
+model axis.  Each device then owns a contiguous tile of compute cells
+(their slots, queues, channels and LCO futures travel with them); the
+engine code itself stays single-abstraction — ``run_chunk_body`` is
+unchanged, and the mesh hops / quiescence sums lower to
+collective-permutes / all-reduces between tiles.  Per-leaf rule:
+
+* rank >= 2 with both leading dims divisible -> ``P(dp, "model", ...)``
+  (the [H, W] cell grid, tiled),
+* rank >= 1 with the leading dim divisible   -> ``P(dp, ...)``
+  (the [IO, ...] streaming-ingestion leaves, row-sharded),
+* everything else (cycle/stat scalars)       -> replicated.
+
+The LM / GNN / DLRM families below feed ``launch/steps.py``; every rule
+degrades per-dimension to replicated when an axis is missing from the
+mesh or does not divide (ctx.resolve_spec), so the same code drives the
+16x16 production pod and a 1-device CPU test.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.ctx import dp_axes_active, model_size, resolve_spec
+
+
+def pad_to(n: int, mult: int) -> int:
+    """Round ``n`` up to a multiple of ``mult`` (mult <= 1 -> n)."""
+    if mult <= 1:
+        return int(n)
+    return int(-(-int(n) // int(mult)) * int(mult))
+
+
+def _dp_entry(mesh):
+    """The data-parallel axis group as a PartitionSpec entry."""
+    dp = dp_axes_active(mesh)
+    return dp[0] if len(dp) == 1 else tuple(dp)
+
+
+def _dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes_active(mesh)
+                        if a in mesh.axis_names]))
+
+
+def _ns(mesh, shape, axes) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(mesh, shape, axes))
+
+
+# ------------------------------------------------------------------ CCA ---
+
+def cca_state_shardings(mesh, state_shape):
+    """Per-leaf shardings for the engine's MachineState pytree.
+
+    ``state_shape`` is the abstract state (``jax.eval_shape`` of
+    ``init_state``); returns the same pytree with a NamedSharding per
+    leaf, suitable for ``jax.jit(in_shardings=...)`` / ``device_put``.
+    """
+    dp_n = _dp_size(mesh)
+    tp_n = model_size(mesh)
+
+    def leaf(l):
+        shape = l.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 2 and shape[0] % dp_n == 0 and shape[1] % tp_n == 0:
+            spec[0], spec[1] = "dp", "model"
+        elif len(shape) >= 1 and shape[0] and shape[0] % dp_n == 0:
+            spec[0] = "dp"
+        return _ns(mesh, shape, spec)
+
+    return jax.tree.map(leaf, state_shape)
+
+
+# ------------------------------------------------------------------- LM ---
+
+# Per-layer stacked weights: logical axes of the TRAILING dims (the
+# leading L layer-stack dim is always replicated — lax.scan slices it).
+# Mirrors the wcast/constrain calls in models/transformer.py.
+_LM_LAYER_AXES = {
+    "wq": ("dp", "model"), "wk": ("dp", "model"), "wv": ("dp", "model"),
+    "wo": ("model", "dp"),
+    "ffn_wi": ("dp", "model"), "ffn_wg": ("dp", "model"),
+    "ffn_wo": ("model", "dp"),
+    "moe_wi": ("model", "dp", None), "moe_wg": ("model", "dp", None),
+    "moe_wo": ("model", None, "dp"),
+    "router": ("dp", None),
+}
+
+
+def lm_param_shardings(mesh, params_shape):
+    """FSDP (d_model over dp) x TP (heads/ffn/experts over model)."""
+    layers = {
+        k: _ns(mesh, v.shape,
+               (None, *_LM_LAYER_AXES.get(k, (None,) * (v.ndim - 1))))
+        for k, v in params_shape["layers"].items()
+    }
+    return dict(
+        embed=_ns(mesh, params_shape["embed"].shape, ("model", None)),
+        unembed=_ns(mesh, params_shape["unembed"].shape, ("dp", None)),
+        final_norm=_ns(mesh, params_shape["final_norm"].shape, (None,)),
+        layers=layers,
+    )
+
+
+def lm_batch_shardings(mesh):
+    dp = _dp_entry(mesh)
+    ns = NamedSharding(mesh, P(dp, None))
+    return dict(tokens=ns, targets=ns)
+
+
+def lm_cache_shardings(mesh, cfg, batch: int):
+    """KV cache (k, v) of [L, B, Tmax, K, dh]: batch over dp; KV heads
+    over model when they divide, else the time axis (flash-decoding)."""
+    dp = _dp_entry(mesh)
+    bspec = dp if batch > 1 and batch % _dp_size(mesh) == 0 else None
+    if cfg.n_kv_heads % model_size(mesh) == 0:
+        spec = P(None, bspec, None, "model", None)
+    else:
+        spec = P(None, bspec, "model", None, None)
+    ns = NamedSharding(mesh, spec)
+    return (ns, ns)
+
+
+# ------------------------------------------------------------------ GNN ---
+
+def gnn_axes(mesh) -> tuple:
+    """Axes the node/edge dimension shards over (graph models flatten the
+    whole mesh into one big 'graph' axis group)."""
+    return tuple(a for a in ("data", "model") if a in mesh.axis_names)
+
+
+def gnn_param_shardings(mesh, params_shape):
+    """GNN weights are tiny relative to the graph: fully replicated."""
+    return jax.tree.map(lambda l: NamedSharding(mesh, P()), params_shape)
+
+
+def gnn_graph_shardings(mesh, fields: dict) -> dict:
+    """Shardings for the non-None Graph fields: node features row-sharded,
+    every ``*edge_index`` sharded along the edge axis (owner-partitioned
+    buckets line up with the node blocks — graph/partition.py)."""
+    ax = gnn_axes(mesh)
+    ax = ax[0] if len(ax) == 1 else ax
+    out = {}
+    for k, v in fields.items():
+        if v is None:
+            continue
+        if k.endswith("edge_index"):
+            out[k] = NamedSharding(mesh, P(None, ax))
+        else:  # x [N, D] / e [E, De]
+            out[k] = NamedSharding(mesh, P(ax, None))
+    return out
+
+
+# ----------------------------------------------------------------- DLRM ---
+
+def dlrm_param_shardings(mesh, params_shape):
+    """Embedding tables row-sharded over 'model' (lookups route to the
+    owning shard — "send work to data"); MLPs replicated."""
+    tp = model_size(mesh)
+    tables = [
+        _ns(mesh, t.shape, ("model", None)) if t.shape[0] % tp == 0
+        else NamedSharding(mesh, P())
+        for t in params_shape["tables"]
+    ]
+    rep = jax.tree.map(lambda l: NamedSharding(mesh, P()),
+                       dict(bot=params_shape["bot"],
+                            top=params_shape["top"]))
+    return dict(tables=tables, bot=rep["bot"], top=rep["top"])
+
+
+def dlrm_batch_shardings(mesh, with_candidates: bool = False):
+    dp = _dp_entry(mesh)
+    out = dict(dense=NamedSharding(mesh, P(dp, None)),
+               sparse=NamedSharding(mesh, P(dp, None, None)),
+               labels=NamedSharding(mesh, P(dp)))
+    if with_candidates:
+        # candidate rows spread over 'model': the query is replicated
+        # there, so scoring is local and top-k merges shard maxima
+        out["candidates"] = NamedSharding(mesh, P("model", None))
+    return out

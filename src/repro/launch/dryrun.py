@@ -24,6 +24,7 @@ import traceback
 def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose=True) -> dict:
     import jax
     from repro.configs.registry import get_shape
+    from repro.dist.compat import use_mesh
     from repro.launch.mesh import make_production_mesh
     from repro.launch.roofline import (model_flops, parse_collective_bytes,
                                        roofline_terms)
@@ -36,7 +37,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose=True) -> dict:
     try:
         t0 = time.time()
         plan = build_plan(bundle, spec, mesh)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             jitted = jax.jit(plan.step, in_shardings=plan.in_shardings,
                              donate_argnums=plan.donate)
             lowered = jitted.lower(*plan.args)
@@ -70,7 +71,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose=True) -> dict:
             for nl in (0, 1):
                 ov = dict(n_layers=nl, attn_chunk=Tk)
                 p2 = build_plan(bundle, spec, mesh, lm_overrides=ov)
-                with jax.set_mesh(mesh):
+                with use_mesh(mesh):
                     comp2 = jax.jit(
                         p2.step, in_shardings=p2.in_shardings,
                         donate_argnums=p2.donate).lower(*p2.args).compile()

@@ -396,6 +396,7 @@ def _ffn_moe_ep(cfg: LMConfig, lp, x):
     per layer (ZeRO-3).
     """
     from jax.sharding import PartitionSpec as P
+    from repro.dist.compat import shard_map
     from repro.dist.ctx import dp_axes_active, get_dist_mesh
 
     mesh = get_dist_mesh()
@@ -455,7 +456,7 @@ def _ffn_moe_ep(cfg: LMConfig, lp, x):
     wi_b = wcast(lp["moe_wi"], cfg, *wi_spec)
     wg_b = wcast(lp["moe_wg"], cfg, *wi_spec) if cfg.gated_ffn else wi_b
     wo_b = wcast(lp["moe_wo"], cfg, *wo_spec)
-    out = jax.shard_map(
+    out = shard_map(
         local_moe, mesh=mesh,
         in_specs=(P(dp, None), P(dp, None), P(dp, None),
                   wi_spec, wi_spec, wo_spec),
