@@ -64,6 +64,20 @@ def bench_paper(scale: str, only=None) -> None:
              f'cell_cycles_per_s={t["cell_cycles_per_s"]}')
 
 
+def bench_engine_backends(scale: str) -> None:
+    """jnp vs pallas cycle-megakernel backends: throughput, bit-exact
+    parity gate, livelock-detector smoke (results/bench_engine.json)."""
+    from benchmarks.engine_throughput import bench_engine
+    r = bench_engine(scale)
+    for backend, b in r["backends"].items():
+        _csv("engine_backend", backend, f'cycles={b["cycles"]}',
+             f'wall_s={b["wall_s"]}',
+             f'cell_cycles_per_s={b["cell_cycles_per_s"]}')
+    _csv("engine_backend", "parity", r["parity"])
+    for backend, v in r["livelock_detector"].items():
+        _csv("engine_backend", f"livelock_{backend}", v)
+
+
 def bench_dist(scale: str) -> None:
     """Sharded-CCA chunk throughput at 1/2/4/8 fake host devices."""
     from benchmarks.dist_scaling import run_scaling
@@ -138,7 +152,7 @@ def main() -> None:
                     choices=["ci", "mid", "paper"])
     ap.add_argument("--only", default=None,
                     help="increments|energy|allocator|activation|skew|"
-                         "throughput|dist|kernels|roofline")
+                         "throughput|engine|dist|kernels|roofline")
     args = ap.parse_args()
     pathlib.Path("results").mkdir(exist_ok=True)
     print("benchmark,fields...", flush=True)
@@ -146,9 +160,12 @@ def main() -> None:
         bench_kernels()
     if args.only in (None, "roofline"):
         bench_roofline()
+    if args.only in (None, "engine"):
+        bench_engine_backends(args.scale)
     if args.only in (None, "dist"):
         bench_dist(args.scale)
-    if args.only is None or args.only not in ("kernels", "roofline", "dist"):
+    if args.only is None or args.only not in ("kernels", "roofline",
+                                              "engine", "dist"):
         bench_paper(args.scale, args.only)
 
 

@@ -44,7 +44,8 @@ def main() -> None:
           f"{sum(len(e) for e in incs)} edges, 10 increments, "
           f"rhizome_cap={args.rhizomes}")
     for i, e in enumerate(incs):
-        r = eng.run_increment(e, max_cycles=2_000_000)
+        r = eng.run_increment(e, max_cycles=2_000_000,
+                              collect_traces=True)
         total_cycles += r.cycles
         peak = r.active_per_cycle.max() if len(r.active_per_cycle) else 0
         print(f"  increment {i}: {len(e):6d} edges  {r.cycles:7d} cycles  "

@@ -1,14 +1,15 @@
 """Core: the paper's message-driven streaming dynamic graph engine."""
 from repro.core.apps import APPS, BFS, CC, INGEST_ONLY, SSSP, DiffusionApp
 from repro.core.config import EngineConfig
-from repro.core.engine import (IncrementResult, StreamingEngine, cycle_step,
+from repro.core.engine import (LIVELOCK_CHUNKS, IncrementResult,
+                               StreamingEngine, cycle_body, cycle_step,
                                quiescent, run_chunk,
                                run_to_quiescence_while)
 from repro.core.state import MachineState, init_state, root_addr
 
 __all__ = [
     "APPS", "BFS", "CC", "INGEST_ONLY", "SSSP", "DiffusionApp",
-    "EngineConfig", "IncrementResult", "StreamingEngine", "MachineState",
-    "cycle_step", "quiescent", "run_chunk", "run_to_quiescence_while",
-    "init_state", "root_addr",
+    "EngineConfig", "IncrementResult", "LIVELOCK_CHUNKS", "StreamingEngine",
+    "MachineState", "cycle_body", "cycle_step", "quiescent", "run_chunk",
+    "run_to_quiescence_while", "init_state", "root_addr",
 ]

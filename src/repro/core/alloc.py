@@ -88,10 +88,19 @@ def choose_alloc_cell(cfg: EngineConfig, rows, cols, arot):
         x = x * jnp.uint32(0xC2B2AE35)
         x ^= x >> 13
         return (x % jnp.uint32(cfg.n_cells)).astype(jnp.int32)
-    offs = jnp.asarray(vicinity_offsets(cfg.vicinity_hops))  # [K,2]
-    k = arot % offs.shape[0]
-    dy = offs[k, 0]
-    dx = offs[k, 1]
+    offs = vicinity_offsets(cfg.vicinity_hops).tolist()      # [K][2] ints
+    k = arot % len(offs)
+    # select the (dy, dx) ring offset by a where-chain over the static
+    # table instead of gathering from a device-resident constant array:
+    # identical results, but the offsets embed as scalar literals, so
+    # this traces inside the Pallas cycle megakernel (which cannot close
+    # over array constants) as well as in the jnp path.
+    dy = jnp.zeros_like(arot)
+    dx = jnp.zeros_like(arot)
+    for i, (oy, ox) in enumerate(offs):
+        m = k == i
+        dy = jnp.where(m, oy, dy)
+        dx = jnp.where(m, ox, dx)
     r = jnp.clip(rows + dy, 0, H - 1)
     c = jnp.clip(cols + dx, 0, W - 1)
     return r * W + c

@@ -24,7 +24,9 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
-INF = jnp.float32(1e9)
+# python float (not a jnp scalar) so app lambdas that close over it embed
+# it as a literal — required for tracing inside the Pallas cycle megakernel
+INF = 1e9
 
 
 @dataclasses.dataclass(frozen=True)

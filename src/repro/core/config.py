@@ -42,7 +42,10 @@ class EngineConfig:
 
     # --- engine ---
     max_cycles: int = 1_000_000
-    chunk: int = 256              # cycles per jitted scan chunk
+    chunk: int = 256              # cycles per jitted scan chunk / per
+                                  # Pallas megakernel launch (K)
+    backend: str = "jnp"          # "jnp" (lax chunk runners) | "pallas"
+                                  # (fused cycle megakernel, DESIGN §6)
 
     @property
     def n_cells(self) -> int:
@@ -91,6 +94,8 @@ class EngineConfig:
 
     def validate(self) -> None:
         assert self.height >= 2 and self.width >= 2
+        assert self.backend in ("jnp", "pallas"), \
+            f"unknown engine backend {self.backend!r}"
         assert self.queue_cap > self.aq_reserve + self.sys_reserve + 1, \
             "queue too small for reserves (DESIGN §4.2); with rhizome_cap=" \
             f"{self.rhizome_cap} need queue_cap > " \

@@ -14,6 +14,19 @@ occupancy, no active action, no deferred future tasks, no pending IO.
 On a real pod this is a tree all-reduce of the pending counters; here it is
 literally ``jnp.sum`` inside the jitted step — GSPMD lowers it to
 ``all-reduce`` when the grid is sharded (see the dry-run HLO).
+
+Two execution backends share ``cycle_body`` (DESIGN §6):
+
+  * ``backend="jnp"`` — lax chunk runners over the HBM-resident state;
+  * ``backend="pallas"`` — the fused cycle megakernel
+    (``kernels/cca_cycle``): K cycles per launch with the state leaves
+    held in VMEM, ``interpret=True`` fallback off-TPU.
+
+The streaming driver's default fast path (``collect_traces=False``) runs
+the whole chunk loop of an increment — including the livelock detector —
+as one device-side ``lax.while_loop`` per spill pass: exactly one jit
+call and one scalar readback per pass.  Per-cycle activity traces are
+opt-in (``collect_traces=True``) and use the chunked host loop.
 """
 from __future__ import annotations
 
@@ -57,7 +70,13 @@ def quiescent(st: MachineState) -> jax.Array:
             & (jnp.sum(st.io_n - st.io_pos) == 0))
 
 
-def cycle_step(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
+def cycle_body(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
+    """One machine cycle, no stats reductions: hop -> staging -> phase0 ->
+    io.  The single copy of the cycle semantics, shared verbatim by the
+    jnp chunk runners below and the Pallas cycle megakernel
+    (``kernels/cca_cycle``).  Returns the per-cell activity masks as aux
+    so ``cycle_step`` can build :class:`CycleStats` without recompute
+    (callers that ignore them pay nothing — XLA DCEs the masks)."""
     rows, cols = _rc(cfg)
     busy0 = st.cvalid
     st, hops = hop_stage(cfg, st, rows, cols)
@@ -66,6 +85,11 @@ def cycle_step(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
     st = io_stage(cfg, st, rows, cols)
     st = st._replace(cycle=st.cycle + 1,
                      stat_hops=st.stat_hops + hops)
+    return st, (active_a, popped, hops)
+
+
+def cycle_step(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
+    st, (active_a, popped, hops) = cycle_body(cfg, app, st)
     stats = CycleStats(
         active=jnp.sum((active_a | popped).astype(jnp.int32)),
         in_flight=jnp.sum(st.ch_n), backlog=jnp.sum(st.aq_n),
@@ -77,7 +101,7 @@ def run_chunk_body(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
     """Un-jitted fixed-length chunk (dry-run / roofline entry point: the
     caller jits this with the production-mesh shardings)."""
     def body(s, _):
-        s2, _ = cycle_step(cfg, app, s)
+        s2, _ = cycle_body(cfg, app, s)
         return s2, None
     st, _ = jax.lax.scan(body, st, None, length=cfg.chunk)
     return st
@@ -85,12 +109,18 @@ def run_chunk_body(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
 
 @functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=2)
 def run_chunk(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
-    """Scan `cfg.chunk` cycles; freeze once quiescent (identity cycles)."""
+    """Scan `cfg.chunk` cycles; freeze once quiescent (identity cycles).
+
+    The stacked ``stats.quiescent`` records quiescence at cycle ENTRY
+    (i.e. flags the frozen identity cycles), so ``argmax`` over it is
+    exactly the number of cycles executed this chunk — in agreement with
+    the state's own ``cycle`` counter and the sync-free device loop.
+    """
     def body(s, _):
         done = quiescent(s)
         s2, stats = cycle_step(cfg, app, s)
         s = jax.tree.map(lambda a, b: jnp.where(done, a, b), s, s2)
-        return s, stats
+        return s, stats._replace(quiescent=done)
     return jax.lax.scan(body, st, None, length=cfg.chunk)
 
 
@@ -104,10 +134,70 @@ def run_to_quiescence_while(cfg: EngineConfig, app: DiffusionApp,
         return (~quiescent(s)) & (s.cycle - start < mc)
 
     def body(s):
-        s2, _ = cycle_step(cfg, app, s)
+        s2, _ = cycle_body(cfg, app, s)
         return s2
 
     return jax.lax.while_loop(cond, body, st)
+
+
+# Livelock detection granularity: this many consecutive chunks with zero
+# executed actions while work is pending => message-dependent deadlock
+# (DESIGN §4.2).  Shared by the device-side fast path and the host-side
+# trace path so both backends fail identically.
+LIVELOCK_CHUNKS = 8
+
+
+def _livelock_msg(cfg: EngineConfig) -> str:
+    return ("engine livelock: no action executed for "
+            f"{LIVELOCK_CHUNKS * cfg.chunk} cycles with work pending. "
+            "Increase chan_cap (>=4) and/or queue_cap "
+            f"(>= aq_reserve+sys_reserve+8 = "
+            f"{cfg.aq_reserve + cfg.sys_reserve + 8}) — see "
+            "DESIGN.md §4.2 buffer-sizing rule.")
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=2)
+def _increment_device_loop(cfg: EngineConfig, app: DiffusionApp,
+                           st: MachineState, limit):
+    """One increment pass entirely on device: a ``lax.while_loop`` over
+    chunks with the livelock detector folded in as a no-progress counter.
+
+    Host<->device traffic per pass is exactly one donated state in and a
+    handful of scalars out — no per-chunk ``int(stat_exec)`` syncs, no
+    per-cycle stats transfer.  Each chunk either runs
+    :func:`run_to_quiescence_while` capped at ``cfg.chunk`` cycles
+    (backend="jnp") or one fused Pallas megakernel launch of
+    ``cfg.chunk`` cycles (backend="pallas"); both leave the state frozen
+    at the exact quiescence cycle, so the two backends are bit-exact.
+    """
+    start = st.cycle
+
+    if cfg.backend == "pallas":
+        from repro.kernels.cca_cycle.ops import cca_cycle_chunk
+
+        def chunk(s):
+            return cca_cycle_chunk(cfg, app, s)[0]
+    else:
+        def chunk(s):
+            return run_to_quiescence_while(cfg, app, s,
+                                           max_cycles=cfg.chunk)
+
+    def cond(carry):
+        s, _, noprog = carry
+        return ((~quiescent(s)) & (s.cycle - start < limit)
+                & (noprog < LIVELOCK_CHUNKS))
+
+    def body(carry):
+        s, last_exec, noprog = carry
+        s = chunk(s)
+        noprog = jnp.where(s.stat_exec == last_exec, noprog + 1,
+                           jnp.int32(0))
+        return (s, s.stat_exec, noprog)
+
+    st, _, noprog = jax.lax.while_loop(
+        cond, body, (st, st.stat_exec, jnp.int32(0)))
+    return st, (st.cycle - start, quiescent(st), noprog, st.stat_hops,
+                st.stat_exec, st.stat_stall, st.stat_allocs)
 
 
 @dataclasses.dataclass
@@ -138,26 +228,67 @@ class StreamingEngine:
         """Host-write a value into EVERY rhizome root of ``vid`` so the
         co-equal roots start value-synced (DESIGN §4.5)."""
         cfg = self.cfg
-        vals = self.state.vals
-        for k in range(cfg.rhizome_cap):
-            r, c, s = rhizome_rcs(cfg, vid, k)
-            vals = vals.at[r, c, s, val_idx].set(value)
-        self.state = self.state._replace(vals=vals)
+        ks = np.arange(cfg.rhizome_cap)
+        r, c, s = rhizome_rcs(cfg, vid, ks)      # [R] each: one scatter
+        self.state = self.state._replace(
+            vals=self.state.vals.at[r, c, s, val_idx].set(value))
 
     # -- stream one increment of edges and run to quiescence --
     def run_increment(self, edges: np.ndarray,
-                      max_cycles: int | None = None) -> IncrementResult:
+                      max_cycles: int | None = None,
+                      collect_traces: bool = False) -> IncrementResult:
+        """Ingest ``edges`` and run to quiescence.
+
+        ``collect_traces=False`` (default) is the sync-free fast path:
+        the whole chunk loop — including the §4.2 livelock detector —
+        runs device-side in one jit call per spill pass, and only scalar
+        totals come back (``active_per_cycle``/``in_flight_per_cycle``
+        are empty).  ``collect_traces=True`` uses the chunked host loop
+        and returns the full per-cycle activity traces (jnp chunk
+        runner; identical state/totals either way).
+        """
         cfg = self.cfg
-        self.state, spill = load_stream(cfg, self.state, edges)
-        act, flt = [], []
-        hops = execs = stalls = allocs = 0
-        cycles = 0
         limit = max_cycles or cfg.max_cycles
-        zero_stats = self.state._replace(stat_hops=jnp.int32(0),
+        self.state, spill = load_stream(cfg, self.state, edges)
+        self.state = self.state._replace(stat_hops=jnp.int32(0),
                                          stat_exec=jnp.int32(0),
                                          stat_stall=jnp.int32(0),
                                          stat_allocs=jnp.int32(0))
-        self.state = zero_stats
+        if collect_traces:
+            return self._run_increment_traced(spill, limit)
+        cycles = 0
+        while True:
+            self.state, out = _increment_device_loop(
+                cfg, self.app, self.state, limit - cycles)
+            ran, q, noprog, hops, execs, stalls, allocs = \
+                (int(x) for x in jax.device_get(out))
+            cycles += ran
+            if q and len(spill):
+                # io_stream_cap overflow residue: the loaded prefix is
+                # fully consumed at quiescence, so the next pass has the
+                # whole IO capacity again (DESIGN §4.2)
+                self.state, spill = load_stream(cfg, self.state, spill)
+                continue
+            break
+        if not q and noprog >= LIVELOCK_CHUNKS:
+            # Message-dependent-deadlock detector: YX DOR keeps the
+            # NETWORK acyclic, but the execute stage (pop -> emit ->
+            # channel) can close a protocol cycle when buffers are sized
+            # below the workload's dependency depth.  Fail loudly with
+            # sizing advice instead of silently dropping work.
+            raise RuntimeError(_livelock_msg(cfg))
+        if len(spill):
+            raise RuntimeError(self._spill_msg(limit, spill))
+        return self._finish_increment(
+            cycles, hops, execs, stalls, allocs,
+            np.zeros(0, np.int32), np.zeros(0, np.int32))
+
+    def _run_increment_traced(self, spill, limit) -> IncrementResult:
+        """Chunked host loop with per-cycle activity traces (the original
+        driver); used when ``collect_traces=True``."""
+        cfg = self.cfg
+        act, flt = [], []
+        cycles = 0
         last_exec, no_progress = 0, 0
         while cycles < limit:
             self.state, stats = run_chunk(cfg, self.app, self.state)
@@ -169,49 +300,39 @@ class StreamingEngine:
                 act.append(a[:n]); flt.append(f[:n])
                 cycles += n
                 if len(spill):
-                    # io_stream_cap overflow residue: the loaded prefix is
-                    # fully consumed at quiescence, so the next pass has
-                    # the whole IO capacity again (DESIGN §4.2)
                     self.state, spill = load_stream(cfg, self.state, spill)
                     continue
                 break
             act.append(a); flt.append(f)
             cycles += cfg.chunk
-            # Message-dependent-deadlock detector: YX DOR keeps the
-            # NETWORK acyclic, but the execute stage (pop -> emit ->
-            # channel) can close a protocol cycle when buffers are sized
-            # below the workload's dependency depth.  Fail loudly with
-            # sizing advice instead of silently dropping work.
             e = int(self.state.stat_exec)
             no_progress = no_progress + 1 if e == last_exec else 0
             last_exec = e
-            if no_progress >= 8:
-                raise RuntimeError(
-                    "engine livelock: no action executed for "
-                    f"{8 * cfg.chunk} cycles with work pending. "
-                    "Increase chan_cap (>=4) and/or queue_cap "
-                    f"(>= aq_reserve+sys_reserve+8 = "
-                    f"{cfg.aq_reserve + cfg.sys_reserve + 8}) — see "
-                    "DESIGN.md §4.2 buffer-sizing rule.")
+            if no_progress >= LIVELOCK_CHUNKS:
+                raise RuntimeError(_livelock_msg(cfg))
         if len(spill):
-            # never drop work silently: the cycle limit ran out before the
-            # spilled residue could be re-loaded and ingested
-            raise RuntimeError(
-                f"cycle limit {limit} exhausted with {len(spill)} spilled "
+            raise RuntimeError(self._spill_msg(limit, spill))
+        return self._finish_increment(
+            cycles, int(self.state.stat_hops), int(self.state.stat_exec),
+            int(self.state.stat_stall), int(self.state.stat_allocs),
+            np.concatenate(act) if act else np.zeros(0, np.int32),
+            np.concatenate(flt) if flt else np.zeros(0, np.int32))
+
+    def _spill_msg(self, limit, spill) -> str:
+        # never drop work silently: the cycle limit ran out before the
+        # spilled residue could be re-loaded and ingested
+        return (f"cycle limit {limit} exhausted with {len(spill)} spilled "
                 "edges not yet ingested; raise max_cycles or io_stream_cap "
                 "(DESIGN.md §4.2).")
-        hops = int(self.state.stat_hops)
-        execs = int(self.state.stat_exec)
-        stalls = int(self.state.stat_stall)
-        allocs = int(self.state.stat_allocs)
+
+    def _finish_increment(self, cycles, hops, execs, stalls, allocs,
+                          act, flt) -> IncrementResult:
         self.total_cycles += cycles
         for k, v in zip(("hops", "execs", "stalls", "allocs"),
                         (hops, execs, stalls, allocs)):
             self.totals[k] += v
         return IncrementResult(
-            cycles=cycles,
-            active_per_cycle=np.concatenate(act) if act else np.zeros(0, np.int32),
-            in_flight_per_cycle=np.concatenate(flt) if flt else np.zeros(0, np.int32),
+            cycles=cycles, active_per_cycle=act, in_flight_per_cycle=flt,
             hops=hops, execs=execs, stalls=stalls, allocs=allocs)
 
     # -- read back application values from the vertex objects --
@@ -225,14 +346,13 @@ class StreamingEngine:
         """
         cfg = self.cfg
         n = n or cfg.n_vertices
-        vids = np.arange(n, dtype=np.int64)
-        vals = np.asarray(self.state.vals[..., val_idx])
-        out = None
-        for k in range(cfg.rhizome_cap):
-            r, c, s = rhizome_rcs(cfg, vids, k)
-            v = vals[r, c, s]
-            out = v if out is None else self.app.combine(out, v)
-        return out
+        # one batched gather over all (root k, vertex) pairs instead of a
+        # python loop of per-k fancy indexing
+        vids = np.arange(n, dtype=np.int64)[None, :]
+        ks = np.arange(cfg.rhizome_cap, dtype=np.int64)[:, None]
+        r, c, s = rhizome_rcs(cfg, vids, ks)                     # [R, n]
+        v = np.asarray(self.state.vals[..., val_idx])[r, c, s]
+        return functools.reduce(self.app.combine, v)
 
     def vertex_object_stats(self) -> dict:
         """Diagnostics over the hierarchical vertex objects: ghost usage +
@@ -255,22 +375,20 @@ class StreamingEngine:
             out.update(mean_hops=float(d.mean()), max_hops=int(d.max()))
         if cfg.rhizome_cap > 1:
             on = np.asarray(st.rhz_on)          # [H,W,S]
-            vids = np.arange(cfg.n_vertices, dtype=np.int64)
-            fan = np.ones(cfg.n_vertices, np.int64)
-            dists = []
-            r0, c0, _ = rhizome_rcs(cfg, vids, 0)
-            for k in range(1, cfg.rhizome_cap):
-                r, c, s = rhizome_rcs(cfg, vids, k)
-                act = on[r, c, s]
-                fan += act
-                if act.any():
-                    dists.append((np.abs(r - r0) + np.abs(c - c0))[act])
+            # batched gather over all (root k, vertex) pairs (no per-k
+            # python loop): rows 1.. are the secondary roots
+            vids = np.arange(cfg.n_vertices, dtype=np.int64)[None, :]
+            ks = np.arange(cfg.rhizome_cap, dtype=np.int64)[:, None]
+            r, c, s = rhizome_rcs(cfg, vids, ks)                 # [R, n]
+            act = on[r, c, s][1:]                                # [R-1, n]
+            fan = 1 + act.sum(axis=0)
+            d = np.abs(r[1:] - r[0]) + np.abs(c[1:] - c[0])      # [R-1, n]
             out.update(
                 rhizomes=int(fan.sum() - cfg.n_vertices),
                 multi_root_vertices=int((fan > 1).sum()),
                 max_fanout=int(fan.max()),
-                mean_rhizome_hops=(float(np.concatenate(dists).mean())
-                                   if dists else 0.0))
+                mean_rhizome_hops=(float(d[act].mean())
+                                   if act.any() else 0.0))
         return out
 
     def ghost_chain_stats(self) -> dict:

@@ -41,8 +41,8 @@ from repro.core.apps import DiffusionApp
 from repro.core.config import EngineConfig
 from repro.core.msg import (MSG_WORDS, OP_ALLOC, OP_APP, OP_INSERT_EDGE,
                             OP_LINK_RHIZOME, OP_RHIZOME_FWD, OP_SET_FUTURE,
-                            TB_AQ_SELF, f2i, i2f, make_msg)
-from repro.core.routing import yx_target_buffer
+                            f2i, i2f, make_msg)
+from repro.core.routing import deliver, yx_target_buffer
 from repro.core.state import G_NULL, G_PENDING, G_SET, MachineState
 
 
@@ -164,25 +164,12 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     tb = yx_target_buffer(cfg, emis[..., 1] // S, rows, cols)
 
     # ---- try to push (network or local queue) ----
-    aq, aq_n = st.aq, st.aq_n
-    ch, ch_n = st.ch, st.ch_n
-
     push_active = active & ~to_reg
-    ok_total = to_reg  # register writes always succeed
-    # local delivery (uses the reserved slots -> never self-deadlocks)
-    want = push_active & (tb == TB_AQ_SELF)
-    ok = want & rings.ring_free(aq_n, cfg.queue_cap)
-    aq, aq_n = rings.ring_push(aq, aq_n, st.aq_head, emis, ok)
-    ok_total |= ok
-    # outgoing channels
-    for d in range(4):
-        want = push_active & (tb == d)
-        ok = want & rings.ring_free(ch_n[:, :, d], cfg.chan_cap)
-        nb, nn = rings.ring_push(ch[:, :, d], ch_n[:, :, d],
-                                 st.ch_head[:, :, d], emis, ok)
-        ch = ch.at[:, :, d].set(nb)
-        ch_n = ch_n.at[:, :, d].set(nn)
-        ok_total |= ok
+    # local delivery uses the reserved slots -> never self-deadlocks
+    aq, aq_n, ch, ch_n, ok_push = deliver(
+        cfg, st.aq, st.aq_n, st.aq_head, st.ch, st.ch_n, st.ch_head,
+        emis, tb, push_active, rings.ring_free(st.aq_n, cfg.queue_cap))
+    ok_total = to_reg | ok_push  # register writes always succeed
 
     # ---- SET_FUTURE / rf-drain bookkeeping on successful stages ----
     fq_pop = ok_total & (sf_from_fq | rf_drain)

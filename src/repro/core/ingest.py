@@ -15,8 +15,8 @@ import numpy as np
 from repro.core import rings
 from repro.core.alloc import rhizome_addr
 from repro.core.config import EngineConfig
-from repro.core.msg import OP_INSERT_EDGE, TB_AQ_SELF, make_msg
-from repro.core.routing import manhattan_hops, yx_target_buffer
+from repro.core.msg import OP_INSERT_EDGE, make_msg
+from repro.core.routing import deliver, manhattan_hops, yx_target_buffer
 from repro.core.state import MachineState, root_addr
 
 
@@ -60,7 +60,7 @@ def load_stream(cfg: EngineConfig, st: MachineState, edges: np.ndarray):
 
 def io_stage(cfg: EngineConfig, st: MachineState, rows, cols):
     """One injection attempt per IO cell per cycle (vectorized on row 0)."""
-    S, Q, C = cfg.slots, cfg.queue_cap, cfg.chan_cap
+    S, Q = cfg.slots, cfg.queue_cap
     IO = cfg.io_cells  # == width
     pend = st.io_pos < st.io_n                       # [IO]
     cur = st.io_edges[jnp.arange(IO), jnp.minimum(st.io_pos, cfg.io_stream_cap - 1)]
@@ -88,25 +88,16 @@ def io_stage(cfg: EngineConfig, st: MachineState, rows, cols):
 
     tb = yx_target_buffer(cfg, tgt // S, r0, c0)     # [IO]
 
-    accepted = jnp.zeros((IO,), bool)
-    aq, aq_n = st.aq, st.aq_n
-    ch, ch_n = st.ch, st.ch_n
-
-    # row-0 slices of the queues
-    want = pend & (tb == TB_AQ_SELF)
-    ok = want & rings.ring_free(aq_n[0], Q, cfg.aq_reserve + cfg.sys_reserve)
-    aq0, aqn0 = rings.ring_push(aq[0], aq_n[0], st.aq_head[0], msg, ok)
-    aq = aq.at[0].set(aq0)
-    aq_n = aq_n.at[0].set(aqn0)
-    accepted |= ok
-    for d in range(4):
-        want = pend & (tb == d)
-        ok = want & rings.ring_free(ch_n[0, :, d], C)
-        b, n = rings.ring_push(ch[0, :, d], ch_n[0, :, d], st.ch_head[0, :, d],
-                               msg, ok)
-        ch = ch.at[0, :, d].set(b)
-        ch_n = ch_n.at[0, :, d].set(n)
-        accepted |= ok
+    # delivery on the row-0 slices (deliver is shape-polymorphic: [IO]
+    # leading batch dim here, the full [H,W] grid in hop/staging)
+    aq0, aqn0, ch0, chn0, accepted = deliver(
+        cfg, st.aq[0], st.aq_n[0], st.aq_head[0],
+        st.ch[0], st.ch_n[0], st.ch_head[0], msg, tb, pend,
+        rings.ring_free(st.aq_n[0], Q, cfg.aq_reserve + cfg.sys_reserve))
+    aq = st.aq.at[0].set(aq0)
+    aq_n = st.aq_n.at[0].set(aqn0)
+    ch = st.ch.at[0].set(ch0)
+    ch_n = st.ch_n.at[0].set(chn0)
 
     io_pos = st.io_pos + accepted.astype(jnp.int32)
     return st._replace(aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n, io_pos=io_pos)

@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.config import EngineConfig
-from repro.core.msg import (DIR_E, DIR_N, DIR_S, DIR_W, OP_ALLOC,
+from repro.core.msg import (DIR_E, DIR_N, DIR_S, DIR_W, N_DIRS, OP_ALLOC,
                             OP_LINK_RHIZOME, OP_RHIZOME_FWD, OP_SET_FUTURE,
                             TB_AQ_SELF, TB_CHAN_E, TB_CHAN_N, TB_CHAN_S,
                             TB_CHAN_W)
@@ -43,6 +43,38 @@ def yx_target_buffer(cfg: EngineConfig, dst_cell, rows, cols):
     horiz = jnp.where(dc < cols, TB_CHAN_W, TB_CHAN_E)
     out = jnp.where(dr != rows, vert, jnp.where(dc != cols, horiz, TB_AQ_SELF))
     return out.astype(jnp.int32)
+
+
+def deliver(cfg: EngineConfig, aq, aq_n, aq_head, ch, ch_n, ch_head,
+            msg, tb, want, aq_room):
+    """Shape-polymorphic buffer admission: place ``msg`` into the local
+    action queue (``tb == TB_AQ_SELF``) or one of the four outgoing
+    channels (``tb == TB_CHAN_*``) of the cell it currently sits at.
+
+    All operands share arbitrary leading batch dims ``*B`` — the full
+    ``[H, W]`` grid in the hop/staging stages (jnp path and the Pallas
+    cycle megakernel alike), the ``[W]`` row-0 slice in the IO stage::
+
+        aq [*B,Q,MSG]  aq_n/aq_head [*B]   ch [*B,4,C,MSG]
+        ch_n/ch_head [*B,4]  msg [*B,MSG]  tb/want/aq_room [*B]
+
+    ``aq_room`` is the caller's action-queue admission predicate (every
+    stage applies a different reserve rule — DESIGN §4.2); channel
+    admission is plain ``ring_free``.  Returns the updated buffers and
+    the acceptance mask; where ``want & ~ok`` the message stays with the
+    caller (wormhole-style backpressure stall).
+    """
+    ok_aq = want & (tb == TB_AQ_SELF) & aq_room
+    aq, aq_n = rings.ring_push(aq, aq_n, aq_head, msg, ok_aq)
+    ok_all = ok_aq
+    for d in range(N_DIRS):
+        ok = want & (tb == d) & rings.ring_free(ch_n[..., d], cfg.chan_cap)
+        nb, nn = rings.ring_push(ch[..., d, :, :], ch_n[..., d],
+                                 ch_head[..., d], msg, ok)
+        ch = ch.at[..., d, :, :].set(nb)
+        ch_n = ch_n.at[..., d].set(nn)
+        ok_all = ok_all | ok
+    return aq, aq_n, ch, ch_n, ok_all
 
 
 # direction -> (row shift, col shift) that moves a message ALONG d.
@@ -118,7 +150,7 @@ def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
         occ_r = shift_to_receiver(occupied, d) & valid_receiver_mask(cfg, d)
         dst_cell = msg_r[..., 1] // cfg.slots
         tb = yx_target_buffer(cfg, dst_cell, rows, cols)       # [H,W]
-        # deliver to AQ.  External pushes respect the local-emission
+        # AQ admission rule: external pushes respect the local-emission
         # reserve; system actions (allocate / set-future) additionally get
         # the sys_reserve headroom so the future protocol always advances.
         # OP_RHIZOME_FWD doubles as the link-ack that drains deferred
@@ -128,24 +160,13 @@ def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
                   | (msg_r[..., 0] == OP_SET_FUTURE)
                   | (msg_r[..., 0] == OP_LINK_RHIZOME)
                   | (msg_r[..., 0] == OP_RHIZOME_FWD))
-        want_aq = occ_r & (tb == TB_AQ_SELF)
         room = jnp.where(is_sys,
                          rings.ring_free(aq_n, Q, cfg.aq_reserve),
                          rings.ring_free(aq_n, Q,
                                          cfg.aq_reserve + cfg.sys_reserve))
-        ok_aq = want_aq & room
-        aq, aq_n = rings.ring_push(aq, aq_n, aq_head, msg_r, ok_aq)
-        # or forward into one of our outgoing channels
-        ok_fwd = jnp.zeros_like(want_aq)
-        for td in (DIR_N, DIR_S, DIR_W, DIR_E):
-            want = occ_r & (tb == td)
-            ok = want & rings.ring_free(ch_n[:, :, td], C)
-            new_b, new_n = rings.ring_push(
-                ch[:, :, td], ch_n[:, :, td], ch_head[:, :, td], msg_r, ok)
-            ch = ch.at[:, :, td].set(new_b)
-            ch_n = ch_n.at[:, :, td].set(new_n)
-            ok_fwd = ok_fwd | ok
-        accepted_r = ok_aq | ok_fwd
+        aq, aq_n, ch, ch_n, accepted_r = deliver(
+            cfg, aq, aq_n, aq_head, ch, ch_n, ch_head,
+            msg_r, tb, occ_r, room)
         hops = hops + jnp.sum(accepted_r.astype(jnp.int32))
         # pop at the sender where the hop succeeded
         acc_s = shift_to_sender(accepted_r, d)

@@ -84,6 +84,16 @@ def shard_map(f, *, mesh=None, in_specs=None, out_specs=None, **kw):
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` version shim: old jax (<=0.4.x)
+    returns a one-dict-per-process LIST, modern jax returns the dict
+    itself.  Always returns the (possibly empty) dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _compat(fn):
     fn._repro_compat = True
     return fn

@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# OPTIONAL layer: custom Pallas kernels for compute hot-spots, one dir
+# per kernel with kernel.py (Pallas body) / ops.py (jitted wrapper,
+# interpret fallback off-TPU) / ref.py (pure-jnp reference).
+#
+#   spmm/            one-hot MXU scatter-SpMM (GNN aggregation)
+#   flash_attention/ blockwise attention (LM serving/training)
+#   embedding_bag/   gathered-sum embedding lookups (DLRM)
+#   cca_cycle/       fused CCA cycle megakernel: K engine cycles per
+#                    launch, MachineState resident in VMEM (DESIGN §6)

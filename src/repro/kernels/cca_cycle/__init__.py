@@ -1,0 +1,5 @@
+"""Fused Pallas cycle megakernel for the CCA engine (DESIGN §6)."""
+from repro.kernels.cca_cycle.ops import cca_cycle_chunk
+from repro.kernels.cca_cycle.ref import cca_cycle_chunk_ref
+
+__all__ = ["cca_cycle_chunk", "cca_cycle_chunk_ref"]

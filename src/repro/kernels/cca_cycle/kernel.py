@@ -1,0 +1,72 @@
+"""Fused Pallas cycle megakernel: K engine cycles per launch with the
+whole ``MachineState`` resident on-chip (DESIGN §6).
+
+The jnp chunk runners round-trip every state leaf through HBM once per
+cycle — one scan/while iteration reads and writes megabytes of queues,
+channels and vertex slots to produce a handful of mutated entries.  This
+kernel is the Pallas analogue of the paper's scratchpad memory-coupled
+CCA cells: every leaf is loaded into VMEM once per launch, ``K =
+cfg.chunk`` cycles run inside a single ``fori_loop`` with the state
+carried entirely on-chip, and the leaves are stored back once.  HBM
+traffic per launch drops from ``K * |state|`` to ``|state|``.
+
+Quiescence (the paper's Terminator object) is tested in-kernel every
+cycle; once reached the remaining iterations freeze to the identity, so
+a launch never overshoots the quiescent state and the final ``cycle``
+counter is the exact quiescence cycle — this is what makes the Pallas
+backend bit-exact against the jnp backend's early-exit ``while_loop``
+(pinned by tests/test_cycle_kernel.py).  The quiescence/progress
+counters accumulate in an SMEM scalar record (layout in ``ops.py``).
+
+The cycle semantics are imported, not re-implemented: the kernel body
+wraps ``ref.frozen_cycles`` — the exact function the reference path
+runs — between its loads and stores, so the two backends cannot drift.
+Off-TPU the kernel runs with ``interpret=True`` (CI) — see ``ops.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.state import MachineState
+from repro.kernels.cca_cycle.ref import frozen_cycles
+
+# SMEM scalar-record layout: one (1, 8) int32 row per launch.
+SCALAR_LEAVES = ("cycle", "stat_hops", "stat_exec", "stat_stall",
+                 "stat_allocs")
+IDX_QUIESCENT = 5   # machine quiescent at end of launch
+IDX_RAN = 6         # non-frozen cycles executed this launch
+N_SCALARS = 8
+# leaves stored as int32 on the wire (Mosaic prefers int over i1 arrays)
+BOOL_LEAVES = frozenset({"cvalid", "fwd_pending", "rhz_on"})
+
+
+def cycle_megakernel(cfg, app, n_cycles, names, *refs):
+    """Pallas kernel body.  ``refs`` is ``(scal_in, *arr_in, scal_out,
+    *arr_out)`` with every input aliased onto the matching output; the
+    array refs follow ``names`` (the non-scalar ``MachineState`` fields
+    in declaration order)."""
+    n_in = len(refs) // 2
+    scal_in, arr_in = refs[0], refs[1:n_in]
+    scal_out, arr_out = refs[n_in], refs[n_in + 1:]
+
+    # ---- load: HBM/VMEM blocks -> on-chip values, rebuild the pytree ----
+    leaves = {}
+    for name, ref in zip(names, arr_in):
+        v = ref[...]
+        leaves[name] = (v != 0) if name in BOOL_LEAVES else v
+    for i, name in enumerate(SCALAR_LEAVES):
+        leaves[name] = scal_in[0, i]
+    st = MachineState(**leaves)
+
+    # ---- compute: K fused cycles, state carried on-chip ----
+    st, q, ran = frozen_cycles(cfg, app, st, n_cycles)
+
+    # ---- store: single write-back per leaf + SMEM counters ----
+    for name, ref in zip(names, arr_out):
+        v = getattr(st, name)
+        ref[...] = v.astype(jnp.int32) if name in BOOL_LEAVES else v
+    for i, name in enumerate(SCALAR_LEAVES):
+        scal_out[0, i] = getattr(st, name)
+    scal_out[0, IDX_QUIESCENT] = q.astype(scal_out.dtype)
+    scal_out[0, IDX_RAN] = ran
+    scal_out[0, N_SCALARS - 1] = 0

@@ -1,0 +1,45 @@
+"""Reference semantics of one megakernel launch, in pure jnp.
+
+``frozen_cycles`` is the single copy of the launch's compute: a
+fixed-length ``fori_loop`` of engine cycles that freezes to the identity
+once the machine quiesces, so a launch never overshoots the quiescent
+state and the final ``cycle`` counter is the exact quiescence cycle.
+The Pallas kernel (``kernel.py``) wraps exactly this function between
+its VMEM loads and stores — the kernel and the reference cannot drift.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.apps import DiffusionApp
+from repro.core.config import EngineConfig
+from repro.core.engine import cycle_body, quiescent
+from repro.core.state import MachineState
+
+
+def frozen_cycles(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
+                  n_cycles: int):
+    """Run ``n_cycles`` engine cycles with freeze-at-quiescence.
+
+    Returns ``(state, quiescent_flag, cycles_run)`` where ``cycles_run``
+    counts only the non-frozen (actually executed) cycles.
+    """
+    def body(_, carry):
+        s, ran = carry
+        done = quiescent(s)
+        s2, _ = cycle_body(cfg, app, s)
+        s = jax.tree.map(lambda a, b: jnp.where(done, a, b), s, s2)
+        return s, ran + (~done).astype(jnp.int32)
+
+    st, ran = jax.lax.fori_loop(0, n_cycles, body, (st, jnp.int32(0)))
+    return st, quiescent(st), ran
+
+
+def cca_cycle_chunk_ref(cfg: EngineConfig, app: DiffusionApp,
+                        st: MachineState, n_cycles: int | None = None):
+    """Drop-in reference for :func:`repro.kernels.cca_cycle.ops.
+    cca_cycle_chunk`: same return convention, no Pallas."""
+    n_cycles = cfg.chunk if n_cycles is None else n_cycles
+    st, q, ran = frozen_cycles(cfg, app, st, n_cycles)
+    return st, jnp.stack([q.astype(jnp.int32), ran])

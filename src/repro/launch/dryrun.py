@@ -24,7 +24,7 @@ import traceback
 def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose=True) -> dict:
     import jax
     from repro.configs.registry import get_shape
-    from repro.dist.compat import use_mesh
+    from repro.dist.compat import cost_analysis_dict, use_mesh
     from repro.launch.mesh import make_production_mesh
     from repro.launch.roofline import (model_flops, parse_collective_bytes,
                                        roofline_terms)
@@ -47,7 +47,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose=True) -> dict:
             rec["compile_s"] = round(time.time() - t0, 2)
         mem = compiled.memory_analysis()
         print(mem)
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         print({k: v for k, v in cost.items()
                if k in ("flops", "bytes accessed")})
         rec["mem"] = dict(
@@ -75,7 +75,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose=True) -> dict:
                     comp2 = jax.jit(
                         p2.step, in_shardings=p2.in_shardings,
                         donate_argnums=p2.donate).lower(*p2.args).compile()
-                cost2 = comp2.cost_analysis()
+                cost2 = cost_analysis_dict(comp2)
                 coll2 = parse_collective_bytes(comp2.as_text())
                 c[nl] = dict(
                     flops=float(cost2.get("flops", 0.0)),
