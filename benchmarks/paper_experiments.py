@@ -211,6 +211,93 @@ def bench_skew(scale="ci", rhizome_caps=(1, 2, 4), verify=True):
     return rows
 
 
+# ------------- virtual lanes vs the §4.2 hub-convergent deadlock ----------
+
+LANES_QUEUE_CAP = 48      # the PRE-oversize sizing: bench_skew must run
+                          # queue_cap=192 to keep lanes=1 alive on this
+                          # stream (DESIGN §4.2); the lane protocol (§7)
+                          # completes it at 48 (and below)
+
+
+def bench_lanes(scale="ci", lanes_list=(1, 2, 4), verify=True,
+                out_json="results/bench_lanes.json"):
+    """Virtual-lane flow control on the R-MAT hub-convergent stream
+    (DESIGN §7): the same skewed stream as :func:`bench_skew`, but at the
+    pre-oversize ``queue_cap`` — small enough that the single-FIFO
+    channel machine (``lanes=1``) hits the §4.2 head-of-line deadlock.
+
+    Records cycles/stalls per lane count into ``results/bench_lanes.json``
+    (plus the oversized ``lanes=1`` baseline for the cycle comparison).
+    ``lanes=1`` is EXPECTED to livelock; any ``lanes >= 2`` cell that
+    livelocks or mismatches the reference fails loudly — this is the CI
+    ``lanes-smoke`` gate.
+    """
+    import json
+    import pathlib
+
+    p = SKEW_SCALES[scale]
+    spec = StreamSpec(n_vertices=p["n_vertices"], n_edges=p["n_edges"],
+                      increments=4, kind="rmat", seed=2)
+    incs = make_stream(spec)
+    allv = np.concatenate(incs)
+    deg = np.bincount(allv[:, 0], minlength=p["n_vertices"])
+    want = bfs_levels(p["n_vertices"], allv, 0) if verify else None
+
+    def _cfg(lanes, queue_cap):
+        return EngineConfig(
+            height=p["height"], width=p["width"],
+            n_vertices=p["n_vertices"], edge_cap=8,
+            ghost_slots=max(64, 4 * p["n_edges"]
+                            // (8 * p["height"] * p["width"])),
+            queue_cap=queue_cap, chan_cap=32, futq_cap=8,
+            io_stream_cap=2 ** 20, chunk=512, lanes=lanes)
+
+    def _run(cfg):
+        eng = StreamingEngine(cfg, "bfs")
+        eng.seed(0, 0.0)
+        cycles = stalls = 0
+        try:
+            for e in incs:
+                r = eng.run_increment(e, max_cycles=4_000_000)
+                cycles += r.cycles
+                stalls += r.stalls
+        except RuntimeError as ex:
+            if "livelock" not in str(ex):
+                raise
+            return dict(status="livelock", cycles=None, stalls=None)
+        if verify:
+            got = eng.values(p["n_vertices"])
+            assert (got == want).all(), \
+                f"BFS mismatch vs NetworkX at lanes={cfg.lanes}"
+        return dict(status="ok", cycles=cycles, stalls=stalls)
+
+    rows = []
+    for L in lanes_list:
+        r = _run(_cfg(L, LANES_QUEUE_CAP))
+        r.update(lanes=L, queue_cap=LANES_QUEUE_CAP,
+                 max_degree=int(deg.max()))
+        rows.append(r)
+    # the pre-lane workaround for the same stream: lanes=1, queue_cap 4x
+    base = _run(_cfg(1, 192))
+    base.update(lanes=1, queue_cap=192)
+
+    bad = [r["lanes"] for r in rows if r["lanes"] >= 2
+           and r["status"] != "ok"]
+    if bad or base["status"] != "ok":
+        raise SystemExit(
+            f"lanes-smoke gate: livelock with lanes in {bad} "
+            f"(baseline {base['status']}) — the §7 protocol regressed")
+
+    out = dict(scale=scale, grid=f'{p["height"]}x{p["width"]}',
+               n_edges=p["n_edges"], rows=rows, oversize_baseline=base)
+    path = pathlib.Path(out_json)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    data = json.loads(path.read_text()) if path.exists() else {}
+    data[f"lanes_{scale}"] = out
+    path.write_text(json.dumps(data, indent=1))
+    return rows, base
+
+
 # ------------------- engine wall-clock throughput -------------------
 
 def bench_engine_throughput(scale="ci"):

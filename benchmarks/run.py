@@ -57,6 +57,18 @@ def bench_paper(scale: str, only=None) -> None:
                  f'multi_root={r["multi_root_vertices"]}',
                  f'max_fanout={r["max_fanout"]}',
                  f'ghosts={r["ghosts"]}')
+    if only in (None, "skew", "lanes"):
+        # virtual lanes on the same R-MAT stream at the PRE-oversize
+        # queue_cap (results/bench_lanes.json; the CI lanes-smoke gate:
+        # lanes>=2 must complete where lanes=1 livelocks, DESIGN §7)
+        rows, base = pe.bench_lanes(scale)
+        for r in rows:
+            _csv("lanes_hub", f'lanes={r["lanes"]}',
+                 f'queue_cap={r["queue_cap"]}', r["status"],
+                 f'cycles={r["cycles"]}', f'stalls={r["stalls"]}')
+        _csv("lanes_hub", "lanes=1", f'queue_cap={base["queue_cap"]}',
+             f'{base["status"]} (oversize baseline)',
+             f'cycles={base["cycles"]}', f'stalls={base["stalls"]}')
     if only in (None, "throughput"):
         t = pe.bench_engine_throughput(scale)
         _csv("engine_throughput", f'cycles={t["cycles"]}',
@@ -152,7 +164,7 @@ def main() -> None:
                     choices=["ci", "mid", "paper"])
     ap.add_argument("--only", default=None,
                     help="increments|energy|allocator|activation|skew|"
-                         "throughput|engine|dist|kernels|roofline")
+                         "lanes|throughput|engine|dist|kernels|roofline")
     args = ap.parse_args()
     pathlib.Path("results").mkdir(exist_ok=True)
     print("benchmark,fields...", flush=True)

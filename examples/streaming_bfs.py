@@ -24,6 +24,9 @@ def main() -> None:
                     help="rmat = power-law skew (pair with --rhizomes)")
     ap.add_argument("--rhizomes", type=int, default=1,
                     help="co-equal roots per vertex (DESIGN §4.5)")
+    ap.add_argument("--lanes", type=int, default=1,
+                    help="virtual lanes per mesh link (DESIGN §7); "
+                         ">=2 enables the escape lane + transit parking")
     args = ap.parse_args()
 
     spec = StreamSpec(n_vertices=args.vertices, n_edges=args.edges,
@@ -34,7 +37,7 @@ def main() -> None:
                        edge_cap=8,
                        ghost_slots=max(32, 3 * args.vertices // 1024),
                        io_stream_cap=2 ** 20, chunk=512,
-                       rhizome_cap=args.rhizomes)
+                       rhizome_cap=args.rhizomes, lanes=args.lanes)
     eng = StreamingEngine(cfg, "bfs")
     eng.seed(0, 0.0)
 
@@ -42,7 +45,7 @@ def main() -> None:
     print(f"{args.kind}/{args.sampling}-sampled stream, "
           f"{args.vertices} vertices, "
           f"{sum(len(e) for e in incs)} edges, 10 increments, "
-          f"rhizome_cap={args.rhizomes}")
+          f"rhizome_cap={args.rhizomes}, lanes={args.lanes}")
     for i, e in enumerate(incs):
         r = eng.run_increment(e, max_cycles=2_000_000,
                               collect_traces=True)

@@ -29,6 +29,20 @@ class EngineConfig:
     chan_cap: int = 8             # per-cell per-direction outgoing channel
     futq_cap: int = 8             # per-future deferred-task queue (Fig. 4)
 
+    # --- virtual lanes (DESIGN §7) ---
+    lanes: int = 1                # virtual lanes per physical channel; lane 0
+                                  # is the escape lane reserved for protocol /
+                                  # continuation traffic, lanes 1.. hash app
+                                  # messages by destination.  1 = the classic
+                                  # single-FIFO channel (bit-exact with the
+                                  # pre-lane engine).
+    lane_cap: int = 0             # per-lane ring capacity; 0 -> split the
+                                  # physical channel: max(1, chan_cap // lanes)
+    park_cap: int = 0             # per-cell park buffer (stalled remote
+                                  # emissions store here instead of wedging
+                                  # the execute pipeline; drained by
+                                  # routing.park_stage); 0 -> chan_cap
+
     # --- IO channels (paper: IO cells stream edges, 1 edge/cycle each) ---
     n_io_cells: int = 0           # 0 -> one per column (paper-style)
     io_stream_cap: int = 4096     # per-IO-cell residual stream capacity
@@ -77,6 +91,23 @@ class EngineConfig:
         return self.n_io_cells if self.n_io_cells > 0 else self.width
 
     @property
+    def lane_capacity(self) -> int:
+        # per-lane ring depth: an explicit lane_cap wins, otherwise the
+        # physical channel's capacity is split evenly over the lanes (the
+        # classic virtual-channel organization: same buffer budget, more
+        # independently-queued FIFOs)
+        return self.lane_cap if self.lane_cap > 0 else \
+            max(1, self.chan_cap // self.lanes)
+
+    @property
+    def park_capacity(self) -> int:
+        # lanes == 1 keeps a 1-deep dummy ring (never pushed) so the
+        # state stays fixed-shape without spending memory on it
+        if self.lanes == 1:
+            return 1
+        return self.park_cap if self.park_cap > 0 else self.chan_cap
+
+    @property
     def aq_reserve(self) -> int:
         # Reserved action-queue slots so the active action's *local*
         # emissions always complete -> no self-deadlock (see DESIGN 4.2).
@@ -102,6 +133,9 @@ class EngineConfig:
             f"{self.aq_reserve + self.sys_reserve + 1}"
         assert self.n_cells * self.slots < 2**31, "address overflows int32"
         assert self.edge_cap >= 1 and self.futq_cap >= 2
+        assert self.lanes >= 1 and self.lane_cap >= 0 and self.park_cap >= 0
+        assert self.lane_capacity >= 1, "lane_capacity must be >= 1"
+        assert self.park_capacity >= 1, "park_capacity must be >= 1"
         assert 1 <= self.rhizome_cap <= self.n_cells, \
             "rhizome_cap must be in [1, n_cells]"
         # rhizome roots of one vertex must land on distinct cells: the k-th

@@ -43,7 +43,7 @@ from repro.core.apps import APPS, DiffusionApp
 from repro.core.config import EngineConfig
 from repro.core.exec_stage import phase0_stage, staging_stage
 from repro.core.ingest import io_stage, load_stream
-from repro.core.routing import hop_stage
+from repro.core.routing import hop_stage, park_stage
 from repro.core.state import (MachineState, init_state, root_addr,
                               self_cell_grid)
 
@@ -65,6 +65,7 @@ def _rc(cfg: EngineConfig):
 
 def quiescent(st: MachineState) -> jax.Array:
     return ((jnp.sum(st.aq_n) == 0) & (jnp.sum(st.ch_n) == 0)
+            & (jnp.sum(st.pk_n) == 0)
             & ~jnp.any(st.cvalid) & (jnp.sum(st.fq_n) == 0)
             & ~jnp.any(st.fwd_pending)
             & (jnp.sum(st.io_n - st.io_pos) == 0))
@@ -80,6 +81,11 @@ def cycle_body(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
     rows, cols = _rc(cfg)
     busy0 = st.cvalid
     st, hops = hop_stage(cfg, st, rows, cols)
+    if cfg.lanes > 1:
+        # re-inject parked transit messages right after the hop stage,
+        # while freshly-vacated lane slots are still free (DESIGN §7);
+        # with lanes == 1 nothing ever parks — skip for a bit-exact trace
+        st = park_stage(cfg, st, rows, cols)
     st, active_a = staging_stage(cfg, app, st, rows, cols)
     st, popped = phase0_stage(cfg, app, st, rows, cols, busy0)
     st = io_stage(cfg, st, rows, cols)
@@ -92,7 +98,8 @@ def cycle_step(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
     st, (active_a, popped, hops) = cycle_body(cfg, app, st)
     stats = CycleStats(
         active=jnp.sum((active_a | popped).astype(jnp.int32)),
-        in_flight=jnp.sum(st.ch_n), backlog=jnp.sum(st.aq_n),
+        in_flight=jnp.sum(st.ch_n) + jnp.sum(st.pk_n),
+        backlog=jnp.sum(st.aq_n),
         hops=hops, quiescent=quiescent(st))
     return st, stats
 
@@ -148,12 +155,15 @@ LIVELOCK_CHUNKS = 8
 
 
 def _livelock_msg(cfg: EngineConfig) -> str:
-    return ("engine livelock: no action executed for "
-            f"{LIVELOCK_CHUNKS * cfg.chunk} cycles with work pending. "
-            "Increase chan_cap (>=4) and/or queue_cap "
+    return ("engine livelock: no action executed and no message hopped "
+            f"for {LIVELOCK_CHUNKS * cfg.chunk} cycles with work pending "
+            "— every virtual lane is stuck. "
+            f"Enable virtual lanes (lanes>=2, currently {cfg.lanes}) so "
+            "protocol traffic escapes head-of-line blocking, and/or "
+            "increase chan_cap (>=4) / queue_cap "
             f"(>= aq_reserve+sys_reserve+8 = "
             f"{cfg.aq_reserve + cfg.sys_reserve + 8}) — see "
-            "DESIGN.md §4.2 buffer-sizing rule.")
+            "DESIGN.md §4.2/§7 buffer-sizing rules.")
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=2)
@@ -188,14 +198,19 @@ def _increment_device_loop(cfg: EngineConfig, app: DiffusionApp,
                 & (noprog < LIVELOCK_CHUNKS))
 
     def body(carry):
-        s, last_exec, noprog = carry
+        s, last_prog, noprog = carry
         s = chunk(s)
-        noprog = jnp.where(s.stat_exec == last_exec, noprog + 1,
-                           jnp.int32(0))
-        return (s, s.stat_exec, noprog)
+        # progress = an action completed OR a message hopped a link: with
+        # virtual lanes a chunk may be all-transit (messages draining
+        # through sibling lanes while a hub lane is full), so exec-only
+        # progress would false-positive; no-progress now means every
+        # lane AND every cell is stuck (DESIGN §7)
+        prog = s.stat_exec + s.stat_hops
+        noprog = jnp.where(prog == last_prog, noprog + 1, jnp.int32(0))
+        return (s, prog, noprog)
 
     st, _, noprog = jax.lax.while_loop(
-        cond, body, (st, st.stat_exec, jnp.int32(0)))
+        cond, body, (st, st.stat_exec + st.stat_hops, jnp.int32(0)))
     return st, (st.cycle - start, quiescent(st), noprog, st.stat_hops,
                 st.stat_exec, st.stat_stall, st.stat_allocs)
 
@@ -305,7 +320,7 @@ class StreamingEngine:
                 break
             act.append(a); flt.append(f)
             cycles += cfg.chunk
-            e = int(self.state.stat_exec)
+            e = int(self.state.stat_exec) + int(self.state.stat_hops)
             no_progress = no_progress + 1 if e == last_exec else 0
             last_exec = e
             if no_progress >= LIVELOCK_CHUNKS:

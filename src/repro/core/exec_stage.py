@@ -41,8 +41,8 @@ from repro.core.apps import DiffusionApp
 from repro.core.config import EngineConfig
 from repro.core.msg import (MSG_WORDS, OP_ALLOC, OP_APP, OP_INSERT_EDGE,
                             OP_LINK_RHIZOME, OP_RHIZOME_FWD, OP_SET_FUTURE,
-                            f2i, i2f, make_msg)
-from repro.core.routing import deliver, yx_target_buffer
+                            TB_AQ_SELF, f2i, i2f, make_msg)
+from repro.core.routing import deliver, msg_lane, yx_target_buffer
 from repro.core.state import G_NULL, G_PENDING, G_SET, MachineState
 
 
@@ -89,6 +89,7 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     dst = st.cmsg[..., 1]
     slot = dst % S
     k = st.cphase - 1  # emission index
+    cellid = rows * W + cols
 
     is_app = op == OP_APP
     is_sf = op == OP_SET_FUTURE
@@ -113,7 +114,6 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     rss = sel(st.rstate, slot)
     n_bcast = jnp.where(is_app & (slot < cfg.root_slots) & (rss == G_SET),
                         cfg.rhizome_cap - 1, 0)
-    cellid = rows * W + cols
     v_self = slot * cfg.n_cells + cellid           # vid owning a root slot
     sib = jnp.clip(kd - ne + 1, 1, cfg.rhizome_cap - 1 if cfg.rhizome_cap > 1
                    else 1)
@@ -165,11 +165,32 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
 
     # ---- try to push (network or local queue) ----
     push_active = active & ~to_reg
-    # local delivery uses the reserved slots -> never self-deadlocks
+    # local delivery uses the reserved slots -> never self-deadlocks;
+    # channel pushes enter the emission's virtual lane (escape lane 0
+    # for protocol messages, destination-hashed data lane otherwise)
     aq, aq_n, ch, ch_n, ok_push = deliver(
         cfg, st.aq, st.aq_n, st.aq_head, st.ch, st.ch_n, st.ch_head,
-        emis, tb, push_active, rings.ring_free(st.aq_n, cfg.queue_cap))
+        emis, tb, msg_lane(cfg, emis[..., 0], emis[..., 1]), push_active,
+        rings.ring_free(st.aq_n, cfg.queue_cap))
     ok_total = to_reg | ok_push  # register writes always succeed
+    parked = jnp.zeros_like(ok_push)
+    pk, pk_n = st.pk, st.pk_n
+    if cfg.lanes > 1:
+        # transit parking (DESIGN §7): a remote emission whose channel
+        # lane is full is stored into the cell's park buffer instead of
+        # wedging the pipeline — the cell keeps consuming (the
+        # consumption guarantee that, with the escape lane, makes the
+        # §4.2 protocol live).  The park buffer is deliberately a
+        # SEPARATE ring: in-transit messages must never occupy action-
+        # queue space, or they would hold the queue above the admission
+        # thresholds and starve the very deliveries that drain them.
+        # routing.park_stage re-injects parked messages each cycle.  If
+        # the park buffer is full the action simply stays active (the
+        # pre-lane wormhole stall — lossless fallback).
+        parked = (push_active & ~ok_push & (tb != TB_AQ_SELF)
+                  & rings.ring_free(pk_n, cfg.park_capacity))
+        pk, pk_n = rings.ring_push(pk, pk_n, st.pk_head, emis, parked)
+        ok_total = ok_total | parked
 
     # ---- SET_FUTURE / rf-drain bookkeeping on successful stages ----
     fq_pop = ok_total & (sf_from_fq | rf_drain)
@@ -187,11 +208,14 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     stall = active & ~ok_total
 
     st = st._replace(
-        aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n, fq_n=fq_n, fq_head=fq_head,
+        aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n, pk=pk, pk_n=pk_n,
+        fq_n=fq_n, fq_head=fq_head,
         fwd_val=fwd_val, fwd_pending=fwd_pending,
         cphase=new_phase, cvalid=cvalid,
         stat_exec=st.stat_exec + jnp.sum(done.astype(jnp.int32)),
-        stat_stall=st.stat_stall + jnp.sum(stall.astype(jnp.int32)))
+        stat_stall=st.stat_stall
+        + jnp.sum(stall.astype(jnp.int32))
+        + jnp.sum(parked.astype(jnp.int32)))
     return st, active
 
 

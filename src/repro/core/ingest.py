@@ -16,7 +16,8 @@ from repro.core import rings
 from repro.core.alloc import rhizome_addr
 from repro.core.config import EngineConfig
 from repro.core.msg import OP_INSERT_EDGE, make_msg
-from repro.core.routing import deliver, manhattan_hops, yx_target_buffer
+from repro.core.routing import (deliver, manhattan_hops, msg_lane,
+                                yx_target_buffer)
 from repro.core.state import MachineState, root_addr
 
 
@@ -89,10 +90,13 @@ def io_stage(cfg: EngineConfig, st: MachineState, rows, cols):
     tb = yx_target_buffer(cfg, tgt // S, r0, c0)     # [IO]
 
     # delivery on the row-0 slices (deliver is shape-polymorphic: [IO]
-    # leading batch dim here, the full [H,W] grid in hop/staging)
+    # leading batch dim here, the full [H,W] grid in hop/staging); the
+    # injected inserts are application traffic, so they take a
+    # destination-hashed data lane and the app-level AQ reserve rule
     aq0, aqn0, ch0, chn0, accepted = deliver(
         cfg, st.aq[0], st.aq_n[0], st.aq_head[0],
-        st.ch[0], st.ch_n[0], st.ch_head[0], msg, tb, pend,
+        st.ch[0], st.ch_n[0], st.ch_head[0], msg, tb,
+        msg_lane(cfg, msg[..., 0], msg[..., 1]), pend,
         rings.ring_free(st.aq_n[0], Q, cfg.aq_reserve + cfg.sys_reserve))
     aq = st.aq.at[0].set(aq0)
     aq_n = st.aq_n.at[0].set(aqn0)

@@ -21,9 +21,18 @@ def _iota(cap, dtype=jnp.int32):
 
 
 def ring_push(buf, cnt, head, msg, mask):
-    """Masked push.  buf: [*B, CAP, W]; cnt/head/mask: [*B]; msg: [*B, W].
+    """Masked FIFO push: append ``msg`` at the tail wherever ``mask``.
 
-    Caller must guarantee ``cnt < CAP`` wherever ``mask`` is True.
+    Shapes: ``buf [*B, CAP, W]``, ``cnt/head/mask [*B]``, ``msg [*B, W]``
+    — any number of leading batch dims ``*B`` (per-cell ``[H, W]``,
+    per-slot ``[H, W, S]``, per-lane ``[H, W, L]``, or the IO row ``[W]``
+    / ``[W, L]`` slices).  Returns the updated ``(buf, cnt)``; ``head``
+    is unchanged (pushes write the tail).
+
+    The push is **unconditional where masked**: the caller must
+    guarantee ``cnt < CAP`` wherever ``mask`` is True — admission
+    predicates (:func:`ring_free`, the reserve rules of
+    ``routing.deliver``) belong to the caller, not the ring.
     """
     cap = buf.shape[-2]
     tail = (head + cnt) % cap
@@ -34,17 +43,37 @@ def ring_push(buf, cnt, head, msg, mask):
 
 
 def ring_peek(buf, head):
-    """Read head element.  Returns [*B, W] (zeros where empty)."""
+    """Read every ring's head element without consuming it.
+
+    Shapes: ``buf [*B, CAP, W]``, ``head [*B]``; returns ``[*B, W]``
+    (zeros where a ring is empty — callers gate on their own occupancy
+    mask, e.g. ``cnt > 0``).
+    """
     cap = buf.shape[-2]
     oh = _iota(cap) == (head % cap)[..., None]                 # [*B, CAP]
     return jnp.sum(jnp.where(oh[..., None], buf, 0), axis=-2)
 
 
 def ring_pop(cnt, head, cap, mask):
-    """Advance head (element itself read via ring_peek)."""
+    """Masked pop: advance ``head`` and decrement ``cnt`` where ``mask``.
+
+    The element itself is read beforehand via :func:`ring_peek` (the
+    buffer is not cleared — a slot's words are dead once the head passes
+    them).  Returns the updated ``(cnt, head)``; the caller must only
+    pop non-empty rings.
+    """
     m = mask.astype(cnt.dtype)
     return cnt - m, (head + m) % cap
 
 
 def ring_free(cnt, cap, reserve=0):
+    """Admission predicate: True where a push would leave at least
+    ``reserve`` slots still free (``cnt < cap - reserve``).
+
+    ``reserve`` implements the DESIGN §4.2 action-queue rules: external
+    pushes reserve the active action's local-emission region
+    (``aq_reserve``) and application pushes additionally the system
+    headroom (``sys_reserve``); channel-lane admission uses
+    ``reserve=0`` against ``cfg.lane_capacity``.
+    """
     return cnt < (cap - reserve)

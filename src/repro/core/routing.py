@@ -1,8 +1,20 @@
-"""YX dimension-ordered routing on the cell mesh (paper §4).
+"""YX dimension-ordered routing on the cell mesh (paper §4) with
+virtual-lane flow control on the physical links (DESIGN §7).
 
 Messages take vertical (row) hops first, then horizontal — the
 turn-restricted, minimal-path, deadlock-free YX variant of [Glass & Ni'92]
 cited by the paper.  One hop per cycle per link (256-bit flit).
+
+Each physical link multiplexes ``cfg.lanes`` independently-queued
+**virtual lanes** (Dally-style VC flow control): lane 0 is the escape
+lane reserved for protocol/continuation traffic (allocate, set-future,
+link-rhizome and the rhizome link-ack), lanes ``1..lanes-1`` carry
+application traffic hashed by destination (:func:`msg_lane`).  A
+round-robin arbiter at every link grants the flit slot to one admissible
+lane per cycle, so a lane wedged behind a congested hub can never block
+its sibling lanes — the seed-era head-of-line deadlock of DESIGN §4.2.
+With ``cfg.lanes == 1`` every message rides lane 0 and the machine is
+bit-exact with the pre-lane engine.
 
 The hop stage is written as masked ``jnp.roll`` over the ``[H, W]`` grid.
 Under pjit/GSPMD with the grid sharded over mesh axes this lowers to
@@ -14,28 +26,76 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.config import EngineConfig
-from repro.core.msg import (DIR_E, DIR_N, DIR_S, DIR_W, N_DIRS, OP_ALLOC,
-                            OP_LINK_RHIZOME, OP_RHIZOME_FWD, OP_SET_FUTURE,
-                            TB_AQ_SELF, TB_CHAN_E, TB_CHAN_N, TB_CHAN_S,
-                            TB_CHAN_W)
+from repro.core.msg import (DIR_E, DIR_N, DIR_S, DIR_W, MSG_WORDS, N_DIRS,
+                            OP_ALLOC, OP_LINK_RHIZOME, OP_RHIZOME_FWD,
+                            OP_SET_FUTURE, TB_AQ_SELF, TB_CHAN_E, TB_CHAN_N,
+                            TB_CHAN_S, TB_CHAN_W)
 from repro.core import rings
 from repro.core.state import MachineState
 
 
+def is_protocol(op):
+    """``True`` where ``op`` is a system/continuation opcode.
+
+    These are the messages that *unblock* deferred work (Fig. 3/4 and the
+    §4.5 rhizome link protocol): ``OP_ALLOC``, ``OP_SET_FUTURE``,
+    ``OP_LINK_RHIZOME`` and the ``OP_RHIZOME_FWD`` link-ack.  They get
+    two privileges the application traffic does not:
+
+    * the deeper ``aq_reserve``-only admission bound at the action queue
+      (application pushes stop ``sys_reserve`` earlier — DESIGN §4.2);
+    * the **escape lane** (lane 0) on every physical link, which the
+      round-robin arbiter serves independently of the application lanes
+      (DESIGN §7), so a continuation can always reach a queue that still
+      has protocol headroom.
+
+    Shapes broadcast; returns a boolean array shaped like ``op``.
+    """
+    return ((op == OP_ALLOC) | (op == OP_SET_FUTURE)
+            | (op == OP_LINK_RHIZOME) | (op == OP_RHIZOME_FWD))
+
+
+def msg_lane(cfg: EngineConfig, op, dst):
+    """Virtual-lane assignment of a message: ``lane = f(op, dst)``.
+
+    Protocol/continuation opcodes (:func:`is_protocol`) ride the reserved
+    **escape lane 0**; application messages (insert-edge, app relax) hash
+    their destination address onto the data lanes ``1..cfg.lanes-1`` so
+    streams converging on different vertices occupy different FIFOs.  The
+    lane is a pure function of the message, so it is identical at every
+    hop — a message stays in its lane end-to-end and any cell can compute
+    any message's lane locally (no per-link lane state to carry).
+
+    With ``cfg.lanes == 1`` everything maps to lane 0 (the pre-lane
+    single-FIFO channel).  Shapes broadcast; returns int32 lane ids.
+    """
+    dst = jnp.asarray(dst, jnp.int32)
+    if cfg.lanes == 1:
+        return jnp.zeros(jnp.broadcast_shapes(jnp.shape(op), dst.shape),
+                         jnp.int32)
+    data = 1 + dst % jnp.int32(cfg.lanes - 1)
+    return jnp.where(is_protocol(op), jnp.int32(0), data)
+
+
 def manhattan_hops(cfg: EngineConfig, dst_cell, rows, cols):
-    """YX-DOR path length (Manhattan hops) from cell (rows, cols) to
-    ``dst_cell``.  Shapes broadcast; the routing-distance metric used by IO
-    cells to pick the *nearest* rhizome root of a vertex (DESIGN §4.5)."""
+    """YX-DOR path length (Manhattan hops) from cell ``(rows, cols)`` to
+    ``dst_cell``.
+
+    Shapes broadcast.  This is the routing-distance metric used by IO
+    cells to pick the *nearest* rhizome root of a vertex (DESIGN §4.5).
+    """
     dr = dst_cell // cfg.width
     dc = dst_cell % cfg.width
     return jnp.abs(dr - rows) + jnp.abs(dc - cols)
 
 
 def yx_target_buffer(cfg: EngineConfig, dst_cell, rows, cols):
-    """Next-buffer code for a message sitting at cell (rows, cols).
+    """Next-buffer code for a message sitting at cell ``(rows, cols)``.
 
-    Vertical first, then horizontal, deliver locally when arrived.
-    Shapes broadcast; returns int32 target-buffer codes (TB_*).
+    Vertical first, then horizontal, deliver locally when arrived:
+    returns ``TB_CHAN_N/S`` while the row differs, ``TB_CHAN_W/E`` while
+    only the column differs, and ``TB_AQ_SELF`` on arrival.  Shapes
+    broadcast; returns int32 target-buffer codes (``TB_*``).
     """
     dr = dst_cell // cfg.width
     dc = dst_cell % cfg.width
@@ -46,35 +106,98 @@ def yx_target_buffer(cfg: EngineConfig, dst_cell, rows, cols):
 
 
 def deliver(cfg: EngineConfig, aq, aq_n, aq_head, ch, ch_n, ch_head,
-            msg, tb, want, aq_room):
+            msg, tb, lane, want, aq_room):
     """Shape-polymorphic buffer admission: place ``msg`` into the local
-    action queue (``tb == TB_AQ_SELF``) or one of the four outgoing
-    channels (``tb == TB_CHAN_*``) of the cell it currently sits at.
+    action queue (``tb == TB_AQ_SELF``) or lane ``lane`` of one of the
+    four outgoing channels (``tb == TB_CHAN_*``) of the cell it currently
+    sits at.
 
     All operands share arbitrary leading batch dims ``*B`` — the full
     ``[H, W]`` grid in the hop/staging stages (jnp path and the Pallas
     cycle megakernel alike), the ``[W]`` row-0 slice in the IO stage::
 
-        aq [*B,Q,MSG]  aq_n/aq_head [*B]   ch [*B,4,C,MSG]
-        ch_n/ch_head [*B,4]  msg [*B,MSG]  tb/want/aq_room [*B]
+        aq [*B,Q,MSG]  aq_n/aq_head [*B]   ch [*B,4,L,LC,MSG]
+        ch_n/ch_head [*B,4,L]  msg [*B,MSG]  tb/lane/want/aq_room [*B]
 
-    ``aq_room`` is the caller's action-queue admission predicate (every
-    stage applies a different reserve rule — DESIGN §4.2); channel
-    admission is plain ``ring_free``.  Returns the updated buffers and
-    the acceptance mask; where ``want & ~ok`` the message stays with the
-    caller (wormhole-style backpressure stall).
+    **Reserve-predicate contract.**  ``aq_room`` is the caller's
+    action-queue admission predicate; ``deliver`` applies it verbatim and
+    adds nothing.  Every stage supplies a different reserve rule
+    (DESIGN §4.2):
+
+    * *hop stage*: ``ring_free(aq_n, Q, aq_reserve)`` for protocol
+      messages, ``ring_free(aq_n, Q, aq_reserve + sys_reserve)`` for
+      application messages — external pushes must leave the active
+      action's local-emission slots plus the system headroom free;
+    * *IO stage*: the application rule (injected inserts are app
+      traffic);
+    * *staging stage*: plain ``ring_free(aq_n, Q)`` — **local**
+      emissions are entitled to the reserved region, which is what makes
+      an action unable to wedge on its own queue.
+
+    Channel admission is per-lane: ``ring_free`` of the target lane's
+    ring against ``cfg.lane_capacity`` (no reserves — the escape-lane
+    split is the channels' progress guarantee, DESIGN §7).  ``lane`` must
+    equal ``msg_lane(cfg, msg)`` for routed messages; the hop stage
+    passes the in-transit lane through unchanged.
+
+    Returns ``(aq, aq_n, ch, ch_n, ok)`` — the updated buffers and the
+    acceptance mask.  Where ``want & ~ok`` the message stays with the
+    caller (wormhole-style backpressure stall); ``deliver`` never drops
+    a message.
     """
     ok_aq = want & (tb == TB_AQ_SELF) & aq_room
     aq, aq_n = rings.ring_push(aq, aq_n, aq_head, msg, ok_aq)
     ok_all = ok_aq
+    L, LC = cfg.lanes, cfg.lane_capacity
+    oh_lane = rings._iota(L) == lane[..., None]                # [*B, L]
+    msg_l = jnp.broadcast_to(msg[..., None, :],
+                             msg.shape[:-1] + (L, MSG_WORDS))
     for d in range(N_DIRS):
-        ok = want & (tb == d) & rings.ring_free(ch_n[..., d], cfg.chan_cap)
-        nb, nn = rings.ring_push(ch[..., d, :, :], ch_n[..., d],
-                                 ch_head[..., d], msg, ok)
-        ch = ch.at[..., d, :, :].set(nb)
-        ch_n = ch_n.at[..., d].set(nn)
-        ok_all = ok_all | ok
+        ok = ((want & (tb == d))[..., None] & oh_lane
+              & rings.ring_free(ch_n[..., d, :], LC))          # [*B, L]
+        nb, nn = rings.ring_push(ch[..., d, :, :, :], ch_n[..., d, :],
+                                 ch_head[..., d, :], msg_l, ok)
+        ch = ch.at[..., d, :, :, :].set(nb)
+        ch_n = ch_n.at[..., d, :].set(nn)
+        ok_all = ok_all | jnp.any(ok, axis=-1)
     return aq, aq_n, ch, ch_n, ok_all
+
+
+def park_stage(cfg: EngineConfig, st: MachineState, rows, cols):
+    """Drain the per-cell park buffers back into the virtual lanes
+    (DESIGN §7; ``lanes > 1`` only — callers skip it otherwise).
+
+    A remote emission whose channel lane was full at staging time was
+    *parked* (``exec_stage.staging_stage``) instead of wedging the cell's
+    execute pipeline.  Every cycle this stage attempts to re-inject each
+    cell's park-buffer head into its YX next lane; on failure the head
+    rotates to the tail so one blocked transit cannot head-of-line block
+    the rest of the buffer.  The port is independent of the cell's
+    action/staging registers — parked traffic drains even while the cell
+    is busy computing, which is half of the §7 consumption guarantee
+    (the other half being that parked messages never occupy action-queue
+    space and so never hold the queue above its admission thresholds).
+    """
+    PK = cfg.park_capacity
+    head = rings.ring_peek(st.pk, st.pk_head)                  # [H,W,MSG]
+    want = st.pk_n > 0
+    tb = yx_target_buffer(cfg, head[..., 1] // cfg.slots, rows, cols)
+    lane = msg_lane(cfg, head[..., 0], head[..., 1])
+    # dst is remote by construction (parking requires tb != TB_AQ_SELF at
+    # park time and parked messages re-check their tb here each cycle —
+    # aq_room=False keeps even a stale local-looking head out of the AQ)
+    aq, aq_n, ch, ch_n, ok = deliver(
+        cfg, st.aq, st.aq_n, st.aq_head, st.ch, st.ch_n, st.ch_head,
+        head, tb, lane, want, jnp.zeros_like(want))
+    # success: pop.  failure: rotate (head -> tail; net ring size kept)
+    fail = want & ~ok
+    tail = (st.pk_head + st.pk_n) % PK
+    oh = (rings._iota(PK) == tail[..., None]) & fail[..., None]
+    pk = jnp.where(oh[..., None], head[..., None, :], st.pk)
+    pk_n = st.pk_n - ok.astype(jnp.int32)
+    pk_head = (st.pk_head + want.astype(jnp.int32)) % PK
+    return st._replace(aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n,
+                       pk=pk, pk_n=pk_n, pk_head=pk_head)
 
 
 # direction -> (row shift, col shift) that moves a message ALONG d.
@@ -82,11 +205,12 @@ _SHIFT = {DIR_N: (-1, 0), DIR_S: (1, 0), DIR_W: (0, -1), DIR_E: (0, 1)}
 
 
 def shift_to_receiver(arr, d):
-    """Move per-sender values [H,W,...] so they align with the receiving cell.
+    """Move per-sender values ``[H, W, ...]`` so they align with the
+    receiving cell of a hop along direction ``d``.
 
-    A message leaving (r,c) northwards arrives at (r-1,c): roll by -1 on
-    rows.  Mesh (non-torus): wrapped lanes are masked by the caller using
-    `valid_receiver_mask`.
+    A message leaving ``(r, c)`` northwards arrives at ``(r-1, c)``:
+    roll by ``-1`` on rows.  Mesh (non-torus): wrapped entries are masked
+    by the caller using :func:`valid_receiver_mask`.
     """
     dy, dx = _SHIFT[d]
     a = arr
@@ -98,7 +222,8 @@ def shift_to_receiver(arr, d):
 
 
 def shift_to_sender(arr, d):
-    """Inverse of shift_to_receiver (align acceptance back to the sender)."""
+    """Inverse of :func:`shift_to_receiver`: align per-receiver values
+    (e.g. the acceptance mask) back onto the sending cell."""
     dy, dx = _SHIFT[d]
     a = arr
     if dy:
@@ -109,13 +234,17 @@ def shift_to_sender(arr, d):
 
 
 def valid_receiver_mask(cfg: EngineConfig, d):
-    """[H,W] bool: True where a received-from-direction-d slot is real
-    (i.e. not a torus wrap-around artifact of jnp.roll)."""
+    """``[H, W]`` bool: True where a received-from-direction-``d`` entry
+    is real (i.e. not a torus wrap-around artifact of ``jnp.roll``).
+
+    E.g. for ``DIR_N`` the receiver at row ``r`` reads the sender at row
+    ``r + 1``, so the mask is ``r < H - 1``.
+    """
     H, W = cfg.height, cfg.width
     r = jnp.arange(H)[:, None]
     c = jnp.arange(W)[None, :]
     if d == DIR_N:
-        m = r < H - 1   # receiver row r gets from sender row r+1... see note
+        m = r < H - 1
     elif d == DIR_S:
         m = r > 0
     elif d == DIR_W:
@@ -126,52 +255,99 @@ def valid_receiver_mask(cfg: EngineConfig, d):
 
 
 def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
-    """One routing cycle: the head of every occupied channel tries to hop
-    one link.  At the receiver it is delivered to the action queue (if it
-    arrived) or appended to the proper outgoing channel per YX order.
-    Full buffers exert backpressure: the head simply stays (wormhole-style
-    stall); YX dimension order keeps this deadlock-free.
+    """One routing cycle with per-link virtual-lane arbitration.
+
+    For every cell and direction the link carries **one** message per
+    cycle (the physical flit slot).  The round-robin arbiter picks which
+    lane gets it (DESIGN §7):
+
+    1. every lane's head message is checked for *admissibility* at the
+       receiver — action-queue room under the §4.2 reserve rules if it
+       has arrived, else ``lane_capacity`` room in the same lane of the
+       receiver's next YX channel (a message never changes lanes);
+    2. among the admissible lanes, the one closest after the link's
+       rotating pointer ``ch_rr`` wins the slot; the pointer then
+       advances past the winner, so a lane with an admissible head is
+       served within ``cfg.lanes`` grants of the link (the fairness
+       bound pinned by ``tests/test_lanes.py``);
+    3. lanes whose head is blocked are simply *skipped* — a full lane
+       exerts backpressure on its own traffic only, never on sibling
+       lanes.  With ``lanes == 1`` this degenerates to the pre-lane
+       wormhole stall (the head stays put).
 
     Links are arbitrated in fixed direction order N,S,W,E so multiple
-    arrivals at one cell in the same cycle are sequenced deterministically.
-    Returns (state, hops_this_cycle).
+    arrivals at one cell in the same cycle are sequenced
+    deterministically.  Returns ``(state, hops_this_cycle)``.
     """
-    Q, C = cfg.queue_cap, cfg.chan_cap
+    Q, L, LC = cfg.queue_cap, cfg.lanes, cfg.lane_capacity
     hops = jnp.int32(0)
     aq, aq_n, aq_head = st.aq, st.aq_n, st.aq_head
     ch, ch_n, ch_head = st.ch, st.ch_n, st.ch_head
+    ch_rr = st.ch_rr
+    liota = rings._iota(L)
 
     for d in (DIR_N, DIR_S, DIR_W, DIR_E):
-        # head message of every cell's outgoing channel d
-        head_msg = rings.ring_peek(ch[:, :, d], ch_head[:, :, d])  # [H,W,MSG]
-        occupied = ch_n[:, :, d] > 0
+        # per-lane head message of every cell's outgoing channel d
+        heads = rings.ring_peek(ch[:, :, d], ch_head[:, :, d])  # [H,W,L,MSG]
+        occ = ch_n[:, :, d] > 0                                 # [H,W,L]
         # align with receiver
-        msg_r = shift_to_receiver(head_msg, d)
-        occ_r = shift_to_receiver(occupied, d) & valid_receiver_mask(cfg, d)
-        dst_cell = msg_r[..., 1] // cfg.slots
-        tb = yx_target_buffer(cfg, dst_cell, rows, cols)       # [H,W]
+        msg_r = shift_to_receiver(heads, d)
+        occ_r = (shift_to_receiver(occ, d)
+                 & valid_receiver_mask(cfg, d)[..., None])
+        dst_cell = msg_r[..., 1] // cfg.slots                   # [H,W,L]
+        tb = yx_target_buffer(cfg, dst_cell,
+                              rows[..., None], cols[..., None])
         # AQ admission rule: external pushes respect the local-emission
-        # reserve; system actions (allocate / set-future) additionally get
-        # the sys_reserve headroom so the future protocol always advances.
-        # OP_RHIZOME_FWD doubles as the link-ack that drains deferred
-        # inserts at a pending rhizome root — like SET_FUTURE it must be
-        # able to enter a queue that is closed to application messages.
-        is_sys = ((msg_r[..., 0] == OP_ALLOC)
-                  | (msg_r[..., 0] == OP_SET_FUTURE)
-                  | (msg_r[..., 0] == OP_LINK_RHIZOME)
-                  | (msg_r[..., 0] == OP_RHIZOME_FWD))
-        room = jnp.where(is_sys,
-                         rings.ring_free(aq_n, Q, cfg.aq_reserve),
-                         rings.ring_free(aq_n, Q,
-                                         cfg.aq_reserve + cfg.sys_reserve))
+        # reserve; system actions (allocate / set-future / link-rhizome /
+        # link-ack) additionally get the sys_reserve headroom so the
+        # future protocol always advances (DESIGN §4.2).
+        room = jnp.where(is_protocol(msg_r[..., 0]),
+                         rings.ring_free(aq_n, Q, cfg.aq_reserve)[..., None],
+                         rings.ring_free(aq_n, Q, cfg.aq_reserve
+                                         + cfg.sys_reserve)[..., None])
+        adm = (tb == TB_AQ_SELF) & room
+        for dd in range(N_DIRS):
+            adm = adm | ((tb == dd)
+                         & rings.ring_free(ch_n[:, :, dd], LC))
+        adm_s = shift_to_sender(occ_r & adm, d)                 # [H,W,L]
+
+        # round-robin grant at the sender link: the admissible lane
+        # closest after the rotating pointer wins the flit slot
+        rr = ch_rr[:, :, d]                                     # [H,W]
+        pri = (liota[None, None, :] - rr[..., None]) % L        # [H,W,L]
+        key = jnp.where(adm_s, pri, L)
+        kmin = jnp.min(key, axis=-1)
+        granted = jnp.any(adm_s, axis=-1)                       # [H,W]
+        # pri is a permutation of 0..L-1, so the min is unique when any
+        # lane is admissible; clamp to lane 0 when none is (all gated)
+        g = jnp.where(granted,
+                      jnp.sum(jnp.where(key == kmin[..., None], liota, 0),
+                              axis=-1), 0).astype(jnp.int32)    # [H,W]
+        oh_g = liota == g[..., None]                            # [H,W,L]
+        sel = jnp.sum(jnp.where(oh_g[..., None], heads, 0), axis=2)
+
+        # deliver the granted head at the receiver (re-derives tb/room;
+        # granted implies admissible, so acceptance == grant)
+        msg_g = shift_to_receiver(sel, d)
+        want_r = shift_to_receiver(granted, d) & valid_receiver_mask(cfg, d)
+        lane_g = shift_to_receiver(g, d)
+        tb_g = yx_target_buffer(cfg, msg_g[..., 1] // cfg.slots, rows, cols)
+        room_g = jnp.where(is_protocol(msg_g[..., 0]),
+                           rings.ring_free(aq_n, Q, cfg.aq_reserve),
+                           rings.ring_free(aq_n, Q, cfg.aq_reserve
+                                           + cfg.sys_reserve))
         aq, aq_n, ch, ch_n, accepted_r = deliver(
             cfg, aq, aq_n, aq_head, ch, ch_n, ch_head,
-            msg_r, tb, occ_r, room)
+            msg_g, tb_g, lane_g, want_r, room_g)
         hops = hops + jnp.sum(accepted_r.astype(jnp.int32))
-        # pop at the sender where the hop succeeded
+        # pop the granted lane at the sender; advance the arbiter pointer
+        # past the winner (round-robin fairness)
         acc_s = shift_to_sender(accepted_r, d)
-        n2, h2 = rings.ring_pop(ch_n[:, :, d], ch_head[:, :, d], C, acc_s)
+        n2, h2 = rings.ring_pop(ch_n[:, :, d], ch_head[:, :, d], LC,
+                                acc_s[..., None] & oh_g)
         ch_n = ch_n.at[:, :, d].set(n2)
         ch_head = ch_head.at[:, :, d].set(h2)
+        ch_rr = ch_rr.at[:, :, d].set(jnp.where(acc_s, (g + 1) % L, rr))
 
-    return st._replace(aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n, ch_head=ch_head), hops
+    return st._replace(aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n, ch_head=ch_head,
+                       ch_rr=ch_rr), hops

@@ -52,10 +52,19 @@ class MachineState(NamedTuple):
     aq: jax.Array          # [H,W,Q,MSG] i32
     aq_n: jax.Array        # [H,W] i32
     aq_head: jax.Array     # [H,W] i32
-    # --- per-cell, per-direction outgoing channels ---
-    ch: jax.Array          # [H,W,4,C,MSG] i32
-    ch_n: jax.Array        # [H,W,4] i32
-    ch_head: jax.Array     # [H,W,4] i32
+    # --- per-cell, per-direction outgoing channels, lane-major (§7):
+    #     each physical link carries cfg.lanes independently-queued
+    #     virtual lanes of cfg.lane_capacity messages each ---
+    ch: jax.Array          # [H,W,4,L,LC,MSG] i32
+    ch_n: jax.Array        # [H,W,4,L] i32
+    ch_head: jax.Array     # [H,W,4,L] i32
+    ch_rr: jax.Array       # [H,W,4] i32  round-robin lane-arbiter pointer
+    # --- per-cell park buffer (§7): stalled remote emissions store here
+    #     (separate from the action queue so in-transit messages never
+    #     hold it above the admission thresholds); lanes=1 -> 1-deep dummy
+    pk: jax.Array          # [H,W,PK,MSG] i32
+    pk_n: jax.Array        # [H,W] i32
+    pk_head: jax.Array     # [H,W] i32
     # --- active-action registers (serialized execute/propagate; 1 op/cycle) ---
     cmsg: jax.Array        # [H,W,MSG] i32
     cvalid: jax.Array      # [H,W] bool
@@ -82,7 +91,8 @@ def init_state(cfg: EngineConfig, init_vals: float | np.ndarray = 1e9) -> Machin
     """Fresh machine: all vertices allocated as roots, no edges, empty queues."""
     cfg.validate()
     H, W, S, E = cfg.height, cfg.width, cfg.slots, cfg.edge_cap
-    VN, FQ, Q, C = cfg.n_vals, cfg.futq_cap, cfg.queue_cap, cfg.chan_cap
+    VN, FQ, Q = cfg.n_vals, cfg.futq_cap, cfg.queue_cap
+    VL, LC = cfg.lanes, cfg.lane_capacity
     IO, L = cfg.io_cells, cfg.io_stream_cap
     z32 = lambda *s: jnp.zeros(s, jnp.int32)
     vals = jnp.full((H, W, S, VN), jnp.float32(init_vals))
@@ -101,8 +111,11 @@ def init_state(cfg: EngineConfig, init_vals: float | np.ndarray = 1e9) -> Machin
         fwd_val=jnp.full((H, W, S), INF),
         fwd_pending=jnp.zeros((H, W, S), bool),
         aq=z32(H, W, Q, MSG_WORDS), aq_n=z32(H, W), aq_head=z32(H, W),
-        ch=z32(H, W, N_DIRS, C, MSG_WORDS),
-        ch_n=z32(H, W, N_DIRS), ch_head=z32(H, W, N_DIRS),
+        ch=z32(H, W, N_DIRS, VL, LC, MSG_WORDS),
+        ch_n=z32(H, W, N_DIRS, VL), ch_head=z32(H, W, N_DIRS, VL),
+        ch_rr=z32(H, W, N_DIRS),
+        pk=z32(H, W, cfg.park_capacity, MSG_WORDS),
+        pk_n=z32(H, W), pk_head=z32(H, W),
         cmsg=z32(H, W, MSG_WORDS),
         cvalid=jnp.zeros((H, W), bool),
         cphase=z32(H, W), cT=z32(H, W),

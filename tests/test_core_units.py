@@ -1,4 +1,7 @@
 """Unit tests for the message-driven engine's building blocks."""
+import ast
+import inspect
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -72,6 +75,37 @@ def test_vicinity_offsets_bound():
     assert len(offs) == 24
     assert (np.abs(offs).max(axis=1) <= 2).all()
     assert (np.abs(offs).max(axis=1) >= 1).all()
+
+
+@pytest.mark.parametrize("module_name", ["repro.core.rings",
+                                         "repro.core.routing"])
+def test_public_docstrings(module_name):
+    """pydocstyle-level gate (the tool isn't pinned in this image): every
+    public function of the ring/routing modules documents itself — a
+    docstring exists, starts on the first line with a capital letter or
+    backtick, and the summary sentence ends with a period.  deliver's
+    reserve-predicate contract riding on this is load-bearing: each
+    caller supplies a different §4.2 admission rule."""
+    import importlib
+    mod = importlib.import_module(module_name)
+    tree = ast.parse(inspect.getsource(mod))
+    funcs = [n for n in tree.body if isinstance(n, ast.FunctionDef)
+             and not n.name.startswith("_")]
+    assert funcs, f"no public functions found in {module_name}"
+    for fn in funcs:
+        doc = ast.get_docstring(fn)
+        assert doc, f"{module_name}.{fn.name} is missing a docstring"
+        first = doc.strip().splitlines()[0].strip()
+        assert first and (first[0].isupper() or first[0] in "`\"'["), \
+            f"{module_name}.{fn.name}: summary should start capitalized"
+        summary = doc.strip().split("\n\n")[0].rstrip()
+        assert summary.endswith((".", ":", "::")), \
+            f"{module_name}.{fn.name}: summary should end with a period"
+    if module_name.endswith("routing"):
+        doc = next(ast.get_docstring(f) for f in funcs
+                   if f.name == "deliver")
+        assert "reserve" in doc.lower() and "aq_room" in doc, \
+            "deliver must document the reserve-predicate contract"
 
 
 @pytest.mark.parametrize("policy", ["vicinity", "random"])
