@@ -49,8 +49,15 @@ def _cfg(p: dict, backend: str, **kw) -> EngineConfig:
     return EngineConfig(**base)
 
 
-def bench_engine(scale: str = "ci") -> dict:
-    """Backend throughput + parity + livelock smoke; merges into OUT."""
+def bench_engine(scale: str = "ci", profile: bool = False) -> dict:
+    """Backend throughput + parity + livelock smoke; merges into OUT.
+
+    ``profile=True`` additionally runs both backends with
+    ``telemetry=True`` on the same stream (the ``--profile`` flag of
+    ``benchmarks.run``): records the telemetry overhead vs the plain
+    run, asserts a non-empty frame log, and dumps the Chrome trace and
+    congestion heatmap under ``results/profile/`` (DESIGN §8).
+    """
     p = ENGINE_SCALES.get(scale, ENGINE_SCALES["mid"])  # paper -> mid grid
     spec = StreamSpec(n_vertices=p["n_vertices"], n_edges=p["n_edges"],
                       increments=2, sampling="edge", seed=3)
@@ -76,6 +83,9 @@ def bench_engine(scale: str = "ci") -> dict:
             cyc_per_s=round(r.cycles / dt, 1),
             cell_cycles_per_s=round(r.cycles / dt * n_cells, 0),
             execs=r.execs, hops=r.hops, total_cycles=eng.total_cycles)
+        if profile:
+            rec["backends"][backend]["profile"] = _profile_backend(
+                p, backend, incs, dt, r)
 
     # bit-exactness across backends (the CI parity gate)
     for name, a, b in zip(finals["jnp"]._fields, finals["jnp"],
@@ -105,6 +115,40 @@ def bench_engine(scale: str = "ci") -> dict:
             rec["livelock_detector"][backend] = "fires"
     _merge(rec, key=f"engine_{scale}")
     return rec
+
+
+def _profile_backend(p: dict, backend: str, incs, plain_wall_s: float,
+                     plain_result) -> dict:
+    """Telemetry-on rerun of the timed increment: overhead, frame-total
+    reconciliation against the plain run, and the exporter dumps."""
+    from repro.obs import engine_rates, write_chrome_trace, write_heatmap
+
+    eng = StreamingEngine(_cfg(p, backend, telemetry=True), "bfs")
+    eng.seed(0, 0.0)
+    eng.run_increment(incs[0], max_cycles=2_000_000)  # warm the jit
+    t0 = time.time()
+    r = eng.run_increment(incs[1], max_cycles=2_000_000)
+    dt = time.time() - t0
+    assert r.frames is not None and len(r.frames) > 0, \
+        f"telemetry produced no frames on backend={backend}"
+    # the final frame must reconcile exactly with the scalar counters of
+    # the bit-exact plain run (DESIGN §8)
+    t = r.frames.totals()
+    assert (t["hops"], t["execs"]) == (plain_result.hops,
+                                       plain_result.execs), \
+        (f"frame totals diverged from counters on backend={backend}: "
+         f"{t} vs hops={plain_result.hops} execs={plain_result.execs}")
+    trace = write_chrome_trace(f"results/profile/trace_{backend}.json",
+                               eng.cfg, r.frames)
+    heat = write_heatmap(f"results/profile/heatmap_{backend}.json",
+                         eng.cfg, r.frames)
+    return dict(
+        wall_s=round(dt, 3),
+        overhead_pct=round(100 * (dt - plain_wall_s) / plain_wall_s, 1),
+        frames=len(r.frames), dropped=r.frames.dropped,
+        rates={k: round(v, 3) if isinstance(v, float) else v
+               for k, v in engine_rates(r.frames).items()},
+        trace=trace, heatmap=heat)
 
 
 def record_increments_wallclock(scale: str = "ci") -> dict:

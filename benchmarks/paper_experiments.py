@@ -123,7 +123,7 @@ def bench_allocator(scale="ci"):
     rows = []
     for alloc in ("vicinity", "random"):
         data, eng = run_stream("bfs", "edge", scale, allocator=alloc)
-        stats = eng.ghost_chain_stats()
+        stats = eng.vertex_object_stats()
         rows.append(dict(allocator=alloc,
                          cycles=sum(r["cycles"] for r in data),
                          hops=sum(r["hops"] for r in data),
@@ -183,10 +183,12 @@ def bench_skew(scale="ci", rhizome_caps=(1, 2, 4), verify=True):
             n_vertices=p["n_vertices"], edge_cap=edge_cap,
             ghost_slots=max(64, 4 * p["n_edges"]
                             // (edge_cap * p["height"] * p["width"])),
-            # sized for the R=1 hub pile-up (DESIGN §4.2): every insert
-            # of an R-MAT hub converges on one cell's action queue
-            queue_cap=192, chan_cap=32, futq_cap=8,
-            io_stream_cap=2 ** 20, chunk=512, rhizome_cap=R)
+            # virtual lanes (DESIGN §7) carry the R=1 hub pile-up at the
+            # normal queue sizing — the pre-lane 192 oversize workaround
+            # is gone (lanes>=2 complete at LANES_QUEUE_CAP=48, see
+            # bench_lanes / results/bench_lanes.json)
+            queue_cap=LANES_QUEUE_CAP, chan_cap=32, futq_cap=8,
+            io_stream_cap=2 ** 20, chunk=512, rhizome_cap=R, lanes=2)
         eng = StreamingEngine(cfg, "bfs")
         eng.seed(0, 0.0)
         cycles = hops = stalls = 0
@@ -213,9 +215,10 @@ def bench_skew(scale="ci", rhizome_caps=(1, 2, 4), verify=True):
 
 # ------------- virtual lanes vs the §4.2 hub-convergent deadlock ----------
 
-LANES_QUEUE_CAP = 48      # the PRE-oversize sizing: bench_skew must run
-                          # queue_cap=192 to keep lanes=1 alive on this
-                          # stream (DESIGN §4.2); the lane protocol (§7)
+LANES_QUEUE_CAP = 48      # the normal queue sizing, shared with
+                          # bench_skew: lanes=1 needs a 4x oversize
+                          # (queue_cap=192) to stay alive on this stream
+                          # (DESIGN §4.2); the lane protocol (§7)
                           # completes it at 48 (and below)
 
 

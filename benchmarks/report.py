@@ -59,12 +59,60 @@ def roofline_table(data):
     return "\n".join(lines)
 
 
+_SHADES = " .:-=+*#%@"
+
+
+def _ascii_heat(plane):
+    """Render an [H,W] int plane as an ASCII heat grid (log-ish shading:
+    each cell's count relative to the plane max)."""
+    import math
+    mx = max((v for row in plane for v in row), default=0)
+    lines = []
+    for row in plane:
+        chars = []
+        for v in row:
+            if mx == 0 or v == 0:
+                chars.append(_SHADES[0])
+            else:
+                k = math.log1p(v) / math.log1p(mx)
+                chars.append(_SHADES[min(9, int(k * 9 + 0.5))])
+        lines.append("".join(chars))
+    return "\n".join(lines)
+
+
+def congestion_section(heat: dict) -> str:
+    """Markdown render of one ``results/profile/heatmap_*.json`` dump
+    (the ``repro.obs.export.congestion_heatmap`` schema)."""
+    H, W = heat["grid"]
+    out = [f"grid {H}x{W}, lanes={heat['lanes']}, {heat['cycles']} cycles, "
+           f"{heat['frames']} frames (dropped={heat['dropped']})", ""]
+    for title, plane in (("message arrivals (hop)", heat["stages"]["hop"]),
+                         ("action executions", heat["stages"]["exec"]),
+                         ("stalls", heat["stages"]["stall"]),
+                         ("lane occupancy integral",
+                          heat["lane_occ_integral"]),
+                         ("lane blocked cycles", heat["lane_blocked"]),
+                         ("action-queue hi-water", heat["aq_hiwater"])):
+        total = sum(map(sum, plane))
+        peak = max(map(max, plane))
+        out += [f"**{title}** (total {total}, peak cell {peak})", "```",
+                _ascii_heat(plane), "```", ""]
+    return "\n".join(out)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="results/dryrun.json")
+    ap.add_argument("--heatmap", default="results/profile/heatmap_jnp.json",
+                    help="congestion-heatmap dump (benchmarks.run --profile)")
     ap.add_argument("--section", default="all",
-                    choices=["all", "dryrun", "roofline"])
+                    choices=["all", "dryrun", "roofline", "congestion"])
     args = ap.parse_args()
+    if args.section == "congestion":
+        heat = json.loads(pathlib.Path(args.heatmap).read_text())
+        print(f"### Congestion heatmaps ({args.heatmap})\n")
+        print(congestion_section(heat))
+        return
     data = json.loads(pathlib.Path(args.json).read_text())
     if args.section in ("all", "dryrun"):
         print("### Dry-run — single pod (16x16 = 256 chips)\n")

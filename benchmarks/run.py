@@ -76,15 +76,25 @@ def bench_paper(scale: str, only=None) -> None:
              f'cell_cycles_per_s={t["cell_cycles_per_s"]}')
 
 
-def bench_engine_backends(scale: str) -> None:
+def bench_engine_backends(scale: str, profile: bool = False) -> None:
     """jnp vs pallas cycle-megakernel backends: throughput, bit-exact
-    parity gate, livelock-detector smoke (results/bench_engine.json)."""
+    parity gate, livelock-detector smoke (results/bench_engine.json).
+    ``--profile`` adds the telemetry-on runs: overhead, frame counts and
+    the trace/heatmap dumps under ``results/profile/`` (DESIGN §8)."""
     from benchmarks.engine_throughput import bench_engine
-    r = bench_engine(scale)
+    r = bench_engine(scale, profile=profile)
     for backend, b in r["backends"].items():
         _csv("engine_backend", backend, f'cycles={b["cycles"]}',
              f'wall_s={b["wall_s"]}',
              f'cell_cycles_per_s={b["cell_cycles_per_s"]}')
+        if "profile" in b:
+            pr = b["profile"]
+            _csv("engine_profile", backend,
+                 f'overhead_pct={pr["overhead_pct"]}',
+                 f'frames={pr["frames"]}',
+                 f'execs_per_cycle={pr["rates"]["execs_per_cycle"]}',
+                 f'hops_per_cycle={pr["rates"]["hops_per_cycle"]}',
+                 f'trace={pr["trace"]}', f'heatmap={pr["heatmap"]}')
     _csv("engine_backend", "parity", r["parity"])
     for backend, v in r["livelock_detector"].items():
         _csv("engine_backend", f"livelock_{backend}", v)
@@ -165,6 +175,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="increments|energy|allocator|activation|skew|"
                          "lanes|throughput|engine|dist|kernels|roofline")
+    ap.add_argument("--profile", action="store_true",
+                    help="telemetry-on engine runs: overhead + Chrome "
+                         "trace + congestion heatmap under results/profile/")
     args = ap.parse_args()
     pathlib.Path("results").mkdir(exist_ok=True)
     print("benchmark,fields...", flush=True)
@@ -173,7 +186,7 @@ def main() -> None:
     if args.only in (None, "roofline"):
         bench_roofline()
     if args.only in (None, "engine"):
-        bench_engine_backends(args.scale)
+        bench_engine_backends(args.scale, profile=args.profile)
     if args.only in (None, "dist"):
         bench_dist(args.scale)
     if args.only is None or args.only not in ("kernels", "roofline",

@@ -61,6 +61,17 @@ class EngineConfig:
     backend: str = "jnp"          # "jnp" (lax chunk runners) | "pallas"
                                   # (fused cycle megakernel, DESIGN §6)
 
+    # --- observability (repro.obs, DESIGN §8) ---
+    telemetry: bool = False       # accumulate the per-cell/per-lane
+                                  # telemetry planes inside the cycle
+                                  # stages and snapshot them per chunk
+                                  # into the on-device frame ring; off ->
+                                  # 1x1 dummy planes, bit-exact with the
+                                  # pre-telemetry engine
+    frame_ring: int = 64          # frames (one per chunk) retained on
+                                  # device per increment pass; older
+                                  # frames are overwritten ring-style
+
     @property
     def n_cells(self) -> int:
         return self.height * self.width
@@ -134,6 +145,9 @@ class EngineConfig:
         assert self.n_cells * self.slots < 2**31, "address overflows int32"
         assert self.edge_cap >= 1 and self.futq_cap >= 2
         assert self.lanes >= 1 and self.lane_cap >= 0 and self.park_cap >= 0
+        assert self.frame_ring >= 2, \
+            "frame_ring must hold >= 2 frames (the flight recorder diffs " \
+            "consecutive frames, DESIGN §8)"
         assert self.lane_capacity >= 1, "lane_capacity must be >= 1"
         assert self.park_capacity >= 1, "park_capacity must be >= 1"
         assert 1 <= self.rhizome_cap <= self.n_cells, \

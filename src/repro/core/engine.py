@@ -44,8 +44,9 @@ from repro.core.config import EngineConfig
 from repro.core.exec_stage import phase0_stage, staging_stage
 from repro.core.ingest import io_stage, load_stream
 from repro.core.routing import hop_stage, park_stage
-from repro.core.state import (MachineState, init_state, root_addr,
+from repro.core.state import (TM_L_OCC, MachineState, init_state, root_addr,
                               self_cell_grid)
+from repro.obs import frames as obs_frames
 
 
 class CycleStats(NamedTuple):
@@ -80,6 +81,11 @@ def cycle_body(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
     (callers that ignore them pay nothing — XLA DCEs the masks)."""
     rows, cols = _rc(cfg)
     busy0 = st.cvalid
+    if cfg.telemetry:
+        # per-lane occupancy integral at cycle entry (avg depth =
+        # TM_L_OCC / cycles); the other planes accumulate inside the
+        # stages where the grant/stall masks live (DESIGN §8)
+        st = st._replace(tm_lane=st.tm_lane.at[..., TM_L_OCC].add(st.ch_n))
     st, hops = hop_stage(cfg, st, rows, cols)
     if cfg.lanes > 1:
         # re-inject parked transit messages right after the hop stage,
@@ -89,6 +95,9 @@ def cycle_body(cfg: EngineConfig, app: DiffusionApp, st: MachineState):
     st, active_a = staging_stage(cfg, app, st, rows, cols)
     st, popped = phase0_stage(cfg, app, st, rows, cols, busy0)
     st = io_stage(cfg, st, rows, cols)
+    if cfg.telemetry:
+        hw = jnp.stack([st.aq_n, st.pk_n], axis=-1)
+        st = st._replace(tm_hiw=jnp.maximum(st.tm_hiw, hw))
     st = st._replace(cycle=st.cycle + 1,
                      stat_hops=st.stat_hops + hops)
     return st, (active_a, popped, hops)
@@ -166,6 +175,36 @@ def _livelock_msg(cfg: EngineConfig) -> str:
             "DESIGN.md §4.2/§7 buffer-sizing rules.")
 
 
+class LivelockError(RuntimeError):
+    """Message-dependent deadlock detected (DESIGN §4.2).
+
+    Structured replacement for the bare ``RuntimeError`` string: carries
+    the machine ``cycle`` at detection, the ``chunk`` index within the
+    increment, and — when ``cfg.telemetry`` is on — the flight-recorder
+    ``frames`` (:class:`repro.obs.FrameLog`; ``None`` otherwise).
+    Subclasses ``RuntimeError`` with "livelock" in the message, so
+    pre-existing ``except RuntimeError`` + substring handlers keep
+    working without regex-parsing the message.
+    """
+
+    def __init__(self, msg: str, *, cycle: int, chunk: int, frames=None):
+        super().__init__(msg)
+        self.cycle = cycle
+        self.chunk = chunk
+        self.frames = frames
+
+
+def _raise_livelock(cfg: EngineConfig, *, cycle: int, chunk: int,
+                    frames=None):
+    """Build and raise :class:`LivelockError`, appending the flight
+    recorder's wedge report when frames were captured."""
+    msg = _livelock_msg(cfg)
+    if frames is not None and len(frames) >= 2:
+        from repro.obs.flight import render_wedge_report
+        msg = msg + "\n" + render_wedge_report(cfg, frames)
+    raise LivelockError(msg, cycle=cycle, chunk=chunk, frames=frames)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=2)
 def _increment_device_loop(cfg: EngineConfig, app: DiffusionApp,
                            st: MachineState, limit):
@@ -193,12 +232,12 @@ def _increment_device_loop(cfg: EngineConfig, app: DiffusionApp,
                                            max_cycles=cfg.chunk)
 
     def cond(carry):
-        s, _, noprog = carry
+        s, _, noprog, _ = carry
         return ((~quiescent(s)) & (s.cycle - start < limit)
                 & (noprog < LIVELOCK_CHUNKS))
 
     def body(carry):
-        s, last_prog, noprog = carry
+        s, last_prog, noprog, ring = carry
         s = chunk(s)
         # progress = an action completed OR a message hopped a link: with
         # virtual lanes a chunk may be all-transit (messages draining
@@ -207,12 +246,21 @@ def _increment_device_loop(cfg: EngineConfig, app: DiffusionApp,
         # lane AND every cell is stuck (DESIGN §7)
         prog = s.stat_exec + s.stat_hops
         noprog = jnp.where(prog == last_prog, noprog + 1, jnp.int32(0))
-        return (s, prog, noprog)
+        if cfg.telemetry:
+            ring = obs_frames.ring_store(ring, obs_frames.snapshot(cfg, s))
+        return (s, prog, noprog, ring)
 
-    st, _, noprog = jax.lax.while_loop(
-        cond, body, (st, st.stat_exec + st.stat_hops, jnp.int32(0)))
+    if cfg.telemetry:
+        # frame 0 = pass baseline (also guarantees a non-empty ring even
+        # for an increment that is quiescent on entry)
+        ring0 = obs_frames.ring_store(obs_frames.init_ring(cfg),
+                                      obs_frames.snapshot(cfg, st))
+    else:
+        ring0 = None  # empty pytree: rides the carry at zero cost
+    st, _, noprog, ring = jax.lax.while_loop(
+        cond, body, (st, st.stat_exec + st.stat_hops, jnp.int32(0), ring0))
     return st, (st.cycle - start, quiescent(st), noprog, st.stat_hops,
-                st.stat_exec, st.stat_stall, st.stat_allocs)
+                st.stat_exec, st.stat_stall, st.stat_allocs), ring
 
 
 @dataclasses.dataclass
@@ -224,6 +272,10 @@ class IncrementResult:
     execs: int
     stalls: int
     allocs: int
+    # telemetry frame log (``cfg.telemetry=True`` only, else None): the
+    # last ``cfg.frame_ring`` per-chunk frames of each spill pass, read
+    # back as one batched transfer per pass (DESIGN §8)
+    frames: "obs_frames.FrameLog | None" = None
 
 
 class StreamingEngine:
@@ -269,14 +321,27 @@ class StreamingEngine:
                                          stat_exec=jnp.int32(0),
                                          stat_stall=jnp.int32(0),
                                          stat_allocs=jnp.int32(0))
+        if cfg.telemetry:
+            # the telemetry planes reset with the stat_* scalars so the
+            # final frame of the increment reconciles exactly (DESIGN §8)
+            self.state = self.state._replace(
+                tm_cell=jnp.zeros_like(self.state.tm_cell),
+                tm_lane=jnp.zeros_like(self.state.tm_lane),
+                tm_hiw=jnp.zeros_like(self.state.tm_hiw))
         if collect_traces:
             return self._run_increment_traced(spill, limit)
         cycles = 0
+        rings = []
         while True:
-            self.state, out = _increment_device_loop(
+            self.state, out, ring = _increment_device_loop(
                 cfg, self.app, self.state, limit - cycles)
+            # exactly ONE batched transfer per pass: the scalar record
+            # and the frame ring come back together
+            out, ring = jax.device_get((out, ring))
             ran, q, noprog, hops, execs, stalls, allocs = \
-                (int(x) for x in jax.device_get(out))
+                (int(x) for x in out)
+            if ring is not None:
+                rings.append(ring)
             cycles += ran
             if q and len(spill):
                 # io_stream_cap overflow residue: the loaded prefix is
@@ -285,18 +350,21 @@ class StreamingEngine:
                 self.state, spill = load_stream(cfg, self.state, spill)
                 continue
             break
+        frames = obs_frames.FrameLog.from_rings(rings) if rings else None
         if not q and noprog >= LIVELOCK_CHUNKS:
             # Message-dependent-deadlock detector: YX DOR keeps the
             # NETWORK acyclic, but the execute stage (pop -> emit ->
             # channel) can close a protocol cycle when buffers are sized
             # below the workload's dependency depth.  Fail loudly with
-            # sizing advice instead of silently dropping work.
-            raise RuntimeError(_livelock_msg(cfg))
+            # sizing advice — and the flight recorder's wedge report when
+            # telemetry is on — instead of silently dropping work.
+            _raise_livelock(cfg, cycle=cycles, chunk=cycles // cfg.chunk,
+                            frames=frames)
         if len(spill):
             raise RuntimeError(self._spill_msg(limit, spill))
         return self._finish_increment(
             cycles, hops, execs, stalls, allocs,
-            np.zeros(0, np.int32), np.zeros(0, np.int32))
+            np.zeros(0, np.int32), np.zeros(0, np.int32), frames)
 
     def _run_increment_traced(self, spill, limit) -> IncrementResult:
         """Chunked host loop with per-cycle activity traces (the original
@@ -305,8 +373,17 @@ class StreamingEngine:
         act, flt = [], []
         cycles = 0
         last_exec, no_progress = 0, 0
+        ring = None
+        if cfg.telemetry:
+            # same frame schema as the device loop, snapshotted eagerly
+            # per chunk (this is the debug path — syncs are fine here)
+            ring = obs_frames.ring_store(obs_frames.init_ring(cfg),
+                                         obs_frames.snapshot(cfg, self.state))
         while cycles < limit:
             self.state, stats = run_chunk(cfg, self.app, self.state)
+            if cfg.telemetry:
+                ring = obs_frames.ring_store(
+                    ring, obs_frames.snapshot(cfg, self.state))
             q = np.asarray(stats.quiescent)
             a = np.asarray(stats.active)
             f = np.asarray(stats.in_flight)
@@ -324,14 +401,19 @@ class StreamingEngine:
             no_progress = no_progress + 1 if e == last_exec else 0
             last_exec = e
             if no_progress >= LIVELOCK_CHUNKS:
-                raise RuntimeError(_livelock_msg(cfg))
+                frames = (obs_frames.FrameLog.from_rings(
+                    [jax.device_get(ring)]) if ring is not None else None)
+                _raise_livelock(cfg, cycle=cycles,
+                                chunk=cycles // cfg.chunk, frames=frames)
         if len(spill):
             raise RuntimeError(self._spill_msg(limit, spill))
+        frames = (obs_frames.FrameLog.from_rings([jax.device_get(ring)])
+                  if ring is not None else None)
         return self._finish_increment(
             cycles, int(self.state.stat_hops), int(self.state.stat_exec),
             int(self.state.stat_stall), int(self.state.stat_allocs),
             np.concatenate(act) if act else np.zeros(0, np.int32),
-            np.concatenate(flt) if flt else np.zeros(0, np.int32))
+            np.concatenate(flt) if flt else np.zeros(0, np.int32), frames)
 
     def _spill_msg(self, limit, spill) -> str:
         # never drop work silently: the cycle limit ran out before the
@@ -341,14 +423,15 @@ class StreamingEngine:
                 "(DESIGN.md §4.2).")
 
     def _finish_increment(self, cycles, hops, execs, stalls, allocs,
-                          act, flt) -> IncrementResult:
+                          act, flt, frames=None) -> IncrementResult:
         self.total_cycles += cycles
         for k, v in zip(("hops", "execs", "stalls", "allocs"),
                         (hops, execs, stalls, allocs)):
             self.totals[k] += v
         return IncrementResult(
             cycles=cycles, active_per_cycle=act, in_flight_per_cycle=flt,
-            hops=hops, execs=execs, stalls=stalls, allocs=allocs)
+            hops=hops, execs=execs, stalls=stalls, allocs=allocs,
+            frames=frames)
 
     # -- read back application values from the vertex objects --
     def values(self, n: int | None = None, val_idx: int = 0) -> np.ndarray:
@@ -405,8 +488,3 @@ class StreamingEngine:
                 mean_rhizome_hops=(float(d[act].mean())
                                    if act.any() else 0.0))
         return out
-
-    def ghost_chain_stats(self) -> dict:
-        """Back-compat alias of :meth:`vertex_object_stats` (pre-rhizome
-        name); returns the same dict."""
-        return self.vertex_object_stats()

@@ -43,7 +43,9 @@ from repro.core.msg import (MSG_WORDS, OP_ALLOC, OP_APP, OP_INSERT_EDGE,
                             OP_LINK_RHIZOME, OP_RHIZOME_FWD, OP_SET_FUTURE,
                             TB_AQ_SELF, f2i, i2f, make_msg)
 from repro.core.routing import deliver, msg_lane, yx_target_buffer
-from repro.core.state import G_NULL, G_PENDING, G_SET, MachineState
+from repro.core.state import (G_NULL, G_PENDING, G_SET, MachineState,
+                              TM_ALLOC, TM_BCAST, TM_EXEC, TM_PARK, TM_STAGE,
+                              TM_STALL)
 
 
 def _oh(idx, n, mask=None):
@@ -216,6 +218,14 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
         stat_stall=st.stat_stall
         + jnp.sum(stall.astype(jnp.int32))
         + jnp.sum(parked.astype(jnp.int32)))
+    if cfg.telemetry:
+        i32 = lambda m: m.astype(jnp.int32)
+        tm = st.tm_cell
+        tm = tm.at[..., TM_STAGE].add(i32(active & ok_total))
+        tm = tm.at[..., TM_STALL].add(i32(stall))
+        tm = tm.at[..., TM_PARK].add(i32(parked))
+        tm = tm.at[..., TM_BCAST].add(i32(push_active & ok_total & is_bcast))
+        st = st._replace(tm_cell=tm)
     return st, active
 
 
@@ -419,4 +429,10 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
         stat_exec=st.stat_exec + jnp.sum(done0.astype(jnp.int32)),
         stat_allocs=st.stat_allocs + jnp.sum(alc_room.astype(jnp.int32)),
         stat_stall=st.stat_stall + jnp.sum(rotate.astype(jnp.int32)))
+    if cfg.telemetry:
+        tm = st.tm_cell
+        tm = tm.at[..., TM_EXEC].add(pop.astype(jnp.int32))
+        tm = tm.at[..., TM_ALLOC].add(alc_room.astype(jnp.int32))
+        tm = tm.at[..., TM_STALL].add(rotate.astype(jnp.int32))
+        st = st._replace(tm_cell=tm)
     return st, pop

@@ -18,7 +18,7 @@ from repro.core.config import EngineConfig
 from repro.core.msg import OP_INSERT_EDGE, make_msg
 from repro.core.routing import (deliver, manhattan_hops, msg_lane,
                                 yx_target_buffer)
-from repro.core.state import MachineState, root_addr
+from repro.core.state import MachineState, TM_IO, root_addr
 
 
 def load_stream(cfg: EngineConfig, st: MachineState, edges: np.ndarray):
@@ -104,4 +104,9 @@ def io_stage(cfg: EngineConfig, st: MachineState, rows, cols):
     ch_n = st.ch_n.at[0].set(chn0)
 
     io_pos = st.io_pos + accepted.astype(jnp.int32)
-    return st._replace(aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n, io_pos=io_pos)
+    st = st._replace(aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n, io_pos=io_pos)
+    if cfg.telemetry:
+        # IO cells sit on row 0 (one per column == IO)
+        st = st._replace(tm_cell=st.tm_cell.at[0, :, TM_IO]
+                         .add(accepted.astype(jnp.int32)))
+    return st

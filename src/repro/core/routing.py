@@ -31,7 +31,8 @@ from repro.core.msg import (DIR_E, DIR_N, DIR_S, DIR_W, MSG_WORDS, N_DIRS,
                             OP_SET_FUTURE, TB_AQ_SELF, TB_CHAN_E, TB_CHAN_N,
                             TB_CHAN_S, TB_CHAN_W)
 from repro.core import rings
-from repro.core.state import MachineState
+from repro.core.state import (MachineState, TM_HOP, TM_L_BLOCK, TM_L_GRANT,
+                              TM_UNPARK)
 
 
 def is_protocol(op):
@@ -196,8 +197,12 @@ def park_stage(cfg: EngineConfig, st: MachineState, rows, cols):
     pk = jnp.where(oh[..., None], head[..., None, :], st.pk)
     pk_n = st.pk_n - ok.astype(jnp.int32)
     pk_head = (st.pk_head + want.astype(jnp.int32)) % PK
-    return st._replace(aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n,
-                       pk=pk, pk_n=pk_n, pk_head=pk_head)
+    st = st._replace(aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n,
+                     pk=pk, pk_n=pk_n, pk_head=pk_head)
+    if cfg.telemetry:
+        st = st._replace(tm_cell=st.tm_cell.at[..., TM_UNPARK]
+                         .add(ok.astype(jnp.int32)))
+    return st
 
 
 # direction -> (row shift, col shift) that moves a message ALONG d.
@@ -284,6 +289,7 @@ def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
     aq, aq_n, aq_head = st.aq, st.aq_n, st.aq_head
     ch, ch_n, ch_head = st.ch, st.ch_n, st.ch_head
     ch_rr = st.ch_rr
+    tm_cell, tm_lane = st.tm_cell, st.tm_lane
     liota = rings._iota(L)
 
     for d in (DIR_N, DIR_S, DIR_W, DIR_E):
@@ -348,6 +354,16 @@ def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
         ch_n = ch_n.at[:, :, d].set(n2)
         ch_head = ch_head.at[:, :, d].set(h2)
         ch_rr = ch_rr.at[:, :, d].set(jnp.where(acc_s, (g + 1) % L, rr))
+        if cfg.telemetry:
+            # per-lane grant/blocked attribution at the sender link and
+            # per-cell flit arrivals at the receiver (DESIGN §8)
+            won = oh_g & acc_s[..., None]                       # [H,W,L]
+            tm_lane = tm_lane.at[:, :, d, :, TM_L_GRANT].add(
+                won.astype(jnp.int32))
+            tm_lane = tm_lane.at[:, :, d, :, TM_L_BLOCK].add(
+                (occ & ~won).astype(jnp.int32))
+            tm_cell = tm_cell.at[..., TM_HOP].add(
+                accepted_r.astype(jnp.int32))
 
     return st._replace(aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n, ch_head=ch_head,
-                       ch_rr=ch_rr), hops
+                       ch_rr=ch_rr, tm_cell=tm_cell, tm_lane=tm_lane), hops

@@ -29,6 +29,35 @@ G_NULL, G_PENDING, G_SET = 0, 1, 2
 
 INF = jnp.float32(1e9)
 
+# ---- telemetry plane indices (repro.obs, DESIGN §8) ----
+# Per-cell per-stage activity counts, ``tm_cell [H, W, N_TM_STAGES]``.
+# The counts are CUMULATIVE over an increment (reset with the stat_*
+# scalars) so the final plane reconciles exactly with the scalar
+# counters: sum(TM_HOP) == stat_hops, sum(TM_EXEC) == stat_exec at
+# quiescence, sum(TM_STALL) + sum(TM_PARK) == stat_stall,
+# sum(TM_ALLOC) == stat_allocs.
+TM_EXEC = 0     # actions popped by phase0 (== completed at quiescence)
+TM_ALLOC = 1    # ghost allocations served here
+TM_STALL = 2    # staging backpressure stalls + phase0 head rotations
+TM_HOP = 3      # flits accepted into this cell by the hop stage
+TM_STAGE = 4    # emissions staged successfully (network or local queue)
+TM_PARK = 5     # remote emissions parked (lane full at staging time)
+TM_UNPARK = 6   # parked messages re-injected into a lane
+TM_IO = 7       # streamed edge inserts accepted at this IO cell
+TM_BCAST = 8    # rhizome sibling broadcasts staged (fan-out traffic)
+N_TM_STAGES = 9
+
+# Per-link per-lane counters, ``tm_lane [H, W, 4, L, N_TM_LANE]``.
+TM_L_OCC = 0    # sum of lane occupancy per cycle (avg depth = OCC/cycles)
+TM_L_GRANT = 1  # arbiter grants won AND accepted (== hops on this lane)
+TM_L_BLOCK = 2  # cycles the lane was occupied but not granted
+N_TM_LANE = 3
+
+# Per-cell hi-water marks, ``tm_hiw [H, W, N_TM_HIW]``.
+TM_HW_AQ = 0    # action-queue depth hi-water
+TM_HW_PK = 1    # park-ring depth hi-water
+N_TM_HIW = 2
+
 
 class MachineState(NamedTuple):
     # --- RPVO slot storage [H, W, S, ...] ---
@@ -85,6 +114,13 @@ class MachineState(NamedTuple):
     stat_exec: jax.Array   # scalar i32 actions completed
     stat_stall: jax.Array  # scalar i32 staging stalls
     stat_allocs: jax.Array # scalar i32 ghost allocations
+    # --- telemetry planes (repro.obs, DESIGN §8): accumulated inside the
+    #     cycle stages when cfg.telemetry, snapshotted per chunk into the
+    #     on-device frame ring; 1x1-shaped dummies (never touched) when
+    #     telemetry is off so the off path stays bit-exact and free ---
+    tm_cell: jax.Array     # [H,W,N_TM_STAGES] i32 per-cell stage activity
+    tm_lane: jax.Array     # [H,W,4,L,N_TM_LANE] i32 lane occ/grant/blocked
+    tm_hiw: jax.Array      # [H,W,N_TM_HIW] i32 AQ / park-ring hi-water
 
 
 def init_state(cfg: EngineConfig, init_vals: float | np.ndarray = 1e9) -> MachineState:
@@ -126,6 +162,10 @@ def init_state(cfg: EngineConfig, init_vals: float | np.ndarray = 1e9) -> Machin
         arot=z32(H, W),
         cycle=jnp.int32(0), stat_hops=jnp.int32(0), stat_exec=jnp.int32(0),
         stat_stall=jnp.int32(0), stat_allocs=jnp.int32(0),
+        tm_cell=z32(*((H, W) if cfg.telemetry else (1, 1)), N_TM_STAGES),
+        tm_lane=z32(*((H, W, N_DIRS, VL) if cfg.telemetry
+                      else (1, 1, 1, 1)), N_TM_LANE),
+        tm_hiw=z32(*((H, W) if cfg.telemetry else (1, 1)), N_TM_HIW),
     )
 
 

@@ -18,6 +18,7 @@ import numpy as np
 from repro.launch.train import PRESETS
 from repro.models.transformer import (init_kv_cache, init_lm_params,
                                       lm_decode_step)
+from repro.obs.metrics import render_summary, summarize
 
 
 def serve(cfg, n_requests: int, batch: int, prompt_len: int = 16,
@@ -36,6 +37,7 @@ def serve(cfg, n_requests: int, batch: int, prompt_len: int = 16,
     cur = jnp.zeros((batch, 1), jnp.int32)
     t0 = time.time()
     n_steps = 0
+    step_times = []          # per-decode-step wall latency (repro.obs)
     while done < n_requests:
         # fill free slots (prefill = feeding prompt tokens one step at a
         # time here; the production prefill path is launch/steps.py's)
@@ -58,7 +60,10 @@ def serve(cfg, n_requests: int, batch: int, prompt_len: int = 16,
             else:
                 nxt.append(int(cur[b, 0]))
         cur = jnp.asarray(nxt, jnp.int32)[:, None]
+        ts = time.time()
         logits, cache = step(params, cur, cache, lengths)
+        logits.block_until_ready()
+        step_times.append(time.time() - ts)
         cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         lengths = lengths + jnp.asarray(
             [1 if slots[b] is not None else 0 for b in range(batch)],
@@ -78,7 +83,13 @@ def serve(cfg, n_requests: int, batch: int, prompt_len: int = 16,
     tput = n_steps * batch / dt
     print(f"[serve] {n_requests} requests, {n_steps} steps, "
           f"{tput:.1f} tok/s aggregate")
-    return tokens_out, tput
+    # metrics summary surface (repro.obs.metrics): decode-step latency
+    # percentiles — step 0 is the jit compile, so report it separately
+    print(render_summary("serve/decode_step", step_times[1:]))
+    metrics = summarize([x * 1e3 for x in step_times[1:]], "ms")
+    metrics.update(compile_ms=round(step_times[0] * 1e3, 1),
+                   tok_per_s=round(tput, 1), steps=n_steps)
+    return tokens_out, tput, metrics
 
 
 def main() -> None:

@@ -1,0 +1,185 @@
+"""Telemetry frames: per-chunk snapshots of the machine's telemetry
+planes, kept in a fixed-size on-device ring (DESIGN §8).
+
+A **frame** is one snapshot of the cumulative telemetry planes plus the
+instantaneous queue depths and the scalar counter row, taken once per
+chunk inside the sync-free device loop (``engine._increment_device_loop``)
+— no host sync per chunk.  The ring holds ``cfg.frame_ring`` frames and
+overwrites ring-style; it is read back as ONE batched transfer at the
+end of each increment pass, together with the scalar record the fast
+path already fetched.
+
+Because the planes are cumulative over an increment (reset with the
+``stat_*`` scalars), the FINAL frame reconciles exactly with the scalar
+counters, and per-chunk activity is recovered by differencing
+consecutive frames (:meth:`FrameLog.deltas`) — which is what the
+flight recorder and the Chrome-trace exporter consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import EngineConfig
+from repro.core.state import MachineState
+
+# ---- frame scalar row indices (``Frame.scal [N_FS]``) ----
+FS_CYCLE = 0      # machine cycle at snapshot time
+FS_HOPS = 1       # cumulative stat_hops (this increment)
+FS_EXEC = 2       # cumulative stat_exec
+FS_STALL = 3      # cumulative stat_stall
+FS_ALLOCS = 4     # cumulative stat_allocs
+FS_BACKLOG = 5    # instantaneous sum of action-queue depths
+FS_INFLIGHT = 6   # instantaneous channel + park-ring occupancy
+FS_QUIESCENT = 7  # machine quiescent at snapshot time (0/1)
+N_FS = 8
+
+
+class FrameRing(NamedTuple):
+    """On-device ring of the last ``F = cfg.frame_ring`` frames.
+
+    Every leaf carries a leading ``[F]`` axis; ``n`` counts frames
+    written in total (monotone — it may exceed ``F``, in which case the
+    oldest frames were overwritten).  A plain pytree, so it rides a
+    ``lax.while_loop`` carry and a single ``jax.device_get``.
+    """
+    cell: jax.Array   # [F,H,W,N_TM_STAGES] cumulative stage activity
+    lane: jax.Array   # [F,H,W,4,L,N_TM_LANE] cumulative lane counters
+    hiw: jax.Array    # [F,H,W,N_TM_HIW] AQ/park hi-water marks
+    aq_n: jax.Array   # [F,H,W] instantaneous action-queue depth
+    pk_n: jax.Array   # [F,H,W] instantaneous park-ring depth
+    ch_n: jax.Array   # [F,H,W,4,L] instantaneous lane occupancy
+    scal: jax.Array   # [F,N_FS] scalar counter row
+    n: jax.Array      # scalar i32: frames written (total)
+
+
+def init_ring(cfg: EngineConfig) -> FrameRing:
+    """Zeroed ring for one increment pass (requires ``cfg.telemetry``)."""
+    from repro.core.state import N_TM_HIW, N_TM_LANE, N_TM_STAGES
+    F, H, W, L = cfg.frame_ring, cfg.height, cfg.width, cfg.lanes
+    z = lambda *s: jnp.zeros(s, jnp.int32)
+    return FrameRing(
+        cell=z(F, H, W, N_TM_STAGES), lane=z(F, H, W, 4, L, N_TM_LANE),
+        hiw=z(F, H, W, N_TM_HIW), aq_n=z(F, H, W), pk_n=z(F, H, W),
+        ch_n=z(F, H, W, 4, L), scal=z(F, N_FS), n=jnp.int32(0))
+
+
+def snapshot(cfg: EngineConfig, st: MachineState) -> dict:
+    """One frame (no leading ``F`` axis) from the current state.
+
+    Traceable — called once per chunk inside the device loop, and by the
+    traced host loop for the same schema.
+    """
+    from repro.core.engine import quiescent  # deferred: engine imports us
+    scal = jnp.stack([
+        st.cycle, st.stat_hops, st.stat_exec, st.stat_stall, st.stat_allocs,
+        jnp.sum(st.aq_n), jnp.sum(st.ch_n) + jnp.sum(st.pk_n),
+        quiescent(st).astype(jnp.int32)])
+    return dict(cell=st.tm_cell, lane=st.tm_lane, hiw=st.tm_hiw,
+                aq_n=st.aq_n, pk_n=st.pk_n, ch_n=st.ch_n, scal=scal)
+
+
+def ring_store(ring: FrameRing, frame: dict) -> FrameRing:
+    """Write ``frame`` at slot ``n % F`` and advance ``n`` (traceable)."""
+    F = ring.scal.shape[0]
+    slot = ring.n % F
+
+    def upd(r, f):
+        return jax.lax.dynamic_update_index_in_dim(r, f.astype(r.dtype),
+                                                   slot, 0)
+
+    return FrameRing(
+        cell=upd(ring.cell, frame["cell"]), lane=upd(ring.lane, frame["lane"]),
+        hiw=upd(ring.hiw, frame["hiw"]), aq_n=upd(ring.aq_n, frame["aq_n"]),
+        pk_n=upd(ring.pk_n, frame["pk_n"]), ch_n=upd(ring.ch_n, frame["ch_n"]),
+        scal=upd(ring.scal, frame["scal"]), n=ring.n + 1)
+
+
+_PLANES = ("cell", "lane", "hiw", "aq_n", "pk_n", "ch_n", "scal")
+
+
+@dataclasses.dataclass
+class FrameLog:
+    """Host-side, time-ordered frame sequence (numpy, oldest first).
+
+    Built from the device ring(s) of an increment (one ring per spill
+    pass — the cumulative counters continue monotonically across
+    passes, so concatenation preserves the difference structure).
+    """
+    cell: np.ndarray   # [N,H,W,N_TM_STAGES]
+    lane: np.ndarray   # [N,H,W,4,L,N_TM_LANE]
+    hiw: np.ndarray    # [N,H,W,N_TM_HIW]
+    aq_n: np.ndarray   # [N,H,W]
+    pk_n: np.ndarray   # [N,H,W]
+    ch_n: np.ndarray   # [N,H,W,4,L]
+    scal: np.ndarray   # [N,N_FS]
+    dropped: int = 0   # frames overwritten in the ring before readback
+
+    def __len__(self) -> int:
+        return int(self.scal.shape[0])
+
+    @classmethod
+    def from_rings(cls, rings) -> "FrameLog":
+        """Unroll one or more device rings (already on host) into time
+        order: ring slot ``i % F`` holds frame ``i``, so the surviving
+        window is ``[max(0, n - F), n)``."""
+        parts = {k: [] for k in _PLANES}
+        dropped = 0
+        for ring in rings:
+            n = int(ring.n)
+            if n == 0:
+                continue
+            F = ring.scal.shape[0]
+            k = min(n, F)
+            idx = np.arange(n - k, n) % F
+            dropped += max(0, n - F)
+            for name in _PLANES:
+                parts[name].append(np.asarray(getattr(ring, name))[idx])
+        if not parts["scal"]:
+            raise ValueError("no frames recorded (empty ring)")
+        arrs = {k: np.concatenate(v, axis=0) for k, v in parts.items()}
+        return cls(**arrs, dropped=dropped)
+
+    # -- reductions ---------------------------------------------------
+
+    def last(self) -> dict:
+        """The final frame's planes (cumulative over the increment)."""
+        return {k: getattr(self, k)[-1] for k in _PLANES}
+
+    def totals(self) -> dict:
+        """Scalar totals of the final frame — the reconciliation surface
+        against the engine's ``IncrementResult`` counters."""
+        s = self.scal[-1]
+        return dict(cycle=int(s[FS_CYCLE]), hops=int(s[FS_HOPS]),
+                    execs=int(s[FS_EXEC]), stalls=int(s[FS_STALL]),
+                    allocs=int(s[FS_ALLOCS]), backlog=int(s[FS_BACKLOG]),
+                    in_flight=int(s[FS_INFLIGHT]),
+                    quiescent=bool(s[FS_QUIESCENT]))
+
+    def deltas(self) -> dict:
+        """Per-frame activity: consecutive differences of the cumulative
+        planes/counters (first frame differenced against zero — the
+        counters reset at increment start).  Instantaneous fields
+        (``aq_n``/``pk_n``/``ch_n``/``hiw``) pass through unchanged."""
+        z_cell = np.zeros_like(self.cell[:1])
+        z_lane = np.zeros_like(self.lane[:1])
+        z_scal = np.zeros_like(self.scal[:1])
+        if self.dropped:
+            # the window start is not cycle 0: difference within the
+            # window only (the first surviving frame keeps its cumulative
+            # value as its "delta" otherwise — misleading; drop it)
+            return dict(
+                cell=np.diff(self.cell, axis=0),
+                lane=np.diff(self.lane, axis=0),
+                scal=np.diff(self.scal, axis=0),
+                aq_n=self.aq_n[1:], pk_n=self.pk_n[1:],
+                ch_n=self.ch_n[1:], hiw=self.hiw[1:])
+        return dict(
+            cell=np.diff(np.concatenate([z_cell, self.cell]), axis=0),
+            lane=np.diff(np.concatenate([z_lane, self.lane]), axis=0),
+            scal=np.diff(np.concatenate([z_scal, self.scal]), axis=0),
+            aq_n=self.aq_n, pk_n=self.pk_n, ch_n=self.ch_n, hiw=self.hiw)

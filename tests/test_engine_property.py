@@ -46,7 +46,7 @@ def test_streaming_bfs_always_matches_offline(n, m, n_inc, edge_cap, seed):
     # 2) edge conservation across all RPVO chains
     assert int(np.asarray(eng.state.nedges).sum()) == len(edges)
     # 3) vicinity locality bound holds for every ghost link
-    stats = eng.ghost_chain_stats()
+    stats = eng.vertex_object_stats()
     assert stats["max_hops"] <= 2 * cfg.vicinity_hops
     # 4) monotonicity: levels are never below the offline answer
     assert (eng.values(n) >= want - 1e-6).all()

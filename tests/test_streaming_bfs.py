@@ -127,7 +127,7 @@ def test_ghost_chain_spill_and_locality():
     eng.run_increment(edges, max_cycles=500_000)
     want = bfs_levels(n, edges, 0)
     np.testing.assert_array_equal(eng.values(n), want)
-    stats = eng.ghost_chain_stats()
+    stats = eng.vertex_object_stats()
     assert stats["ghosts"] >= 9  # ceil((40-4)/4) ghosts chained
     # vicinity: Chebyshev<=2 per hop allocation -> Manhattan <= 4 per link
     assert stats["max_hops"] <= 2 * cfg.vicinity_hops
