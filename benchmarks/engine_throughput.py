@@ -113,6 +113,11 @@ def bench_engine(scale: str = "ci", profile: bool = False) -> dict:
         except RuntimeError as e:
             assert "livelock" in str(e), e
             rec["livelock_detector"][backend] = "fires"
+    if profile:
+        # recovery-path cost on the happy path: checkpoint-cadence sweep
+        # + faults-off vs faults-on wall-clock deltas (DESIGN §9)
+        from benchmarks.resilience_smoke import profile_resilience
+        rec["resilience_profile"] = profile_resilience(scale)
     _merge(rec, key=f"engine_{scale}")
     return rec
 

@@ -1,0 +1,190 @@
+"""Resilience smokes + recovery-path cost profile (DESIGN §9) ->
+``results/bench_engine.json``.
+
+Three gates, all exactness-based (the CI ``fault-smoke`` job runs them
+on both backends):
+
+  * **fault_smoke** — a ci-scale BFS stream under a seeded drop+blackout
+    ``FaultPlan`` must demonstrably lose messages (``flt`` counters > 0)
+    and STILL converge to the NetworkX-exact values via the
+    detection+repair pass;
+  * **kill_resume_smoke** — checkpoint at an increment boundary, discard
+    the engine, restore, replay the tail: every state leaf bit-equal to
+    the uninterrupted run;
+  * **recovery_smoke** — the known lanes=1 hub wedge (DESIGN §4.2/§7)
+    completes via ``RecoveryPolicy`` escalation, with the attempt log
+    recording the wedge report.
+
+``profile_resilience`` records what the robustness layer costs when
+nothing goes wrong: a checkpoint-cadence sweep (save every increment /
+every other / never) and the faults-off vs zero-rate-plan vs faulty
+wall-clock deltas.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.engine_throughput import ENGINE_SCALES, _cfg, _merge
+from repro.core import StreamingEngine
+from repro.core.reference import bfs_levels
+from repro.graph.streams import StreamSpec, make_stream
+from repro.resilience import FaultPlan, RecoveryPolicy
+from repro.train.checkpoint import Checkpointer
+
+BACKENDS = ("jnp", "pallas")
+
+
+def _stream(p: dict, increments: int = 3):
+    spec = StreamSpec(n_vertices=p["n_vertices"], n_edges=p["n_edges"],
+                      increments=increments, sampling="edge", seed=3)
+    incs = make_stream(spec)
+    want = bfs_levels(p["n_vertices"], np.concatenate(incs), 0)
+    return incs, want
+
+
+def fault_smoke(scale: str = "ci") -> dict:
+    """Seeded drop+blackout+corrupt stream converges exact via repair."""
+    p = ENGINE_SCALES.get(scale, ENGINE_SCALES["ci"])
+    incs, want = _stream(p)
+    plan = FaultPlan(seed=7, drop_rate=0.04, dup_rate=0.02,
+                     corrupt_rate=0.02,
+                     blackouts=((0, 1, 2, 0, p["chunk"]),))
+    rec = {}
+    for backend in BACKENDS:
+        eng = StreamingEngine(
+            _cfg(p, backend, faults=plan, telemetry=True), "bfs")
+        eng.seed(0, 0.0)
+        t0 = time.time()
+        cycles, flt = 0, np.zeros(4, np.int64)
+        for inc in incs:
+            cycles += eng.run_increment(inc, max_cycles=2_000_000).cycles
+            flt += np.asarray(eng.state.flt)  # counters reset per increment
+        lost = int(flt[0]) + int(flt[2])
+        assert lost > 0, \
+            f"fault plan injected nothing on backend={backend}: {flt}"
+        np.testing.assert_array_equal(eng.values(p["n_vertices"]), want)
+        rec[backend] = dict(status="exact-after-repair", cycles=cycles,
+                            wall_s=round(time.time() - t0, 3),
+                            dropped=int(flt[0]), duplicated=int(flt[1]),
+                            corrupted=int(flt[2]), blackout_hits=int(flt[3]))
+    return rec
+
+
+def kill_resume_smoke(scale: str = "ci") -> dict:
+    """Kill after increment 2 of 3, restore, replay: bit-exact finals."""
+    p = ENGINE_SCALES.get(scale, ENGINE_SCALES["ci"])
+    incs, want = _stream(p)
+    rec = {}
+    for backend in BACKENDS:
+        cfg = _cfg(p, backend)
+        ref = StreamingEngine(cfg, "bfs")
+        ref.seed(0, 0.0)
+        for inc in incs:
+            ref.run_increment(inc, max_cycles=2_000_000)
+        with tempfile.TemporaryDirectory() as d:
+            eng = StreamingEngine(cfg, "bfs")
+            eng.seed(0, 0.0)
+            ck = Checkpointer(d)
+            for inc in incs[:2]:
+                eng.run_increment(inc, ckpt=ck, max_cycles=2_000_000)
+            eng.checkpoint(ck)
+            del eng                                   # the "kill"
+            res = StreamingEngine.restore(cfg, "bfs", Checkpointer(d))
+            res.run_increment(incs[2], max_cycles=2_000_000)
+            for name, a, b in zip(res.state._fields, res.state, ref.state):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"leaf '{name}' diverged across kill-and-resume"
+                            f" on backend={backend}")
+            np.testing.assert_array_equal(res.values(p["n_vertices"]), want)
+        rec[backend] = dict(status="bit-exact", resumed_at=2,
+                            totals=dict(res.totals))
+    return rec
+
+
+def recovery_smoke() -> dict:
+    """The pinned lanes=1 hub wedge completes via lanes escalation."""
+    from repro.core import EngineConfig
+    from repro.graph.streams import hub_edges
+    one = np.float32(1.0).view(np.int32)
+    e = hub_edges(128, 0, 200, seed=3)
+    edges = np.concatenate([e, np.full((len(e), 1), one, np.int64)],
+                           1).astype(np.int32)
+    cfg = EngineConfig(height=8, width=8, n_vertices=128, edge_cap=4,
+                       ghost_slots=48, queue_cap=20, chan_cap=16,
+                       futq_cap=4, chunk=64, lanes=1, max_cycles=200_000,
+                       telemetry=True)
+    eng = StreamingEngine(cfg, "bfs")
+    eng.seed(0, 0.0)
+    eng.run_increment(edges, recover=RecoveryPolicy(max_attempts=2))
+    np.testing.assert_array_equal(
+        eng.values(), bfs_levels(128, e, source=0))
+    assert eng.cfg.lanes == 2 and len(eng.recovery_log) == 1
+    return dict(status="recovered", escalated_lanes=eng.cfg.lanes,
+                attempts=len(eng.recovery_log),
+                wedge_cycle=eng.recovery_log[0]["cycle"])
+
+
+def profile_resilience(scale: str = "ci", backend: str = "jnp") -> dict:
+    """Cost of the robustness layer on the happy path: checkpoint-cadence
+    sweep + faults-off vs zero-rate-plan vs live-faults deltas."""
+    p = ENGINE_SCALES.get(scale, ENGINE_SCALES["ci"])
+    incs, _ = _stream(p, increments=4)
+
+    def run(ck_every=0, faults=None, telemetry=False):
+        eng = StreamingEngine(
+            _cfg(p, backend, faults=faults, telemetry=telemetry), "bfs")
+        eng.seed(0, 0.0)
+        eng.run_increment(incs[0], max_cycles=2_000_000)  # warm the jit
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            t0 = time.time()
+            for i, inc in enumerate(incs[1:]):
+                use = ck_every and (i % ck_every == 0)
+                eng.run_increment(inc, max_cycles=2_000_000,
+                                  ckpt=ck if use else None)
+            ck.wait()
+            return round(time.time() - t0, 3)
+
+    base = run()
+    rec = dict(backend=backend, increments=len(incs) - 1,
+               baseline_wall_s=base)
+    # checkpoint cadence sweep: async boundary saves overlap the device
+    # loop, so the cadence cost is the residual serialization tail
+    for every, name in ((1, "ckpt_every_1"), (2, "ckpt_every_2")):
+        w = run(ck_every=every)
+        rec[name] = dict(wall_s=w,
+                         overhead_pct=round(100 * (w - base) / base, 1))
+    # fault machinery cost: zero-rate plan traces the fault code but
+    # fires nothing; the live plan adds the repair pass on top
+    for plan, name in ((FaultPlan(seed=7), "faults_zero_rate"),
+                       (FaultPlan(seed=7, drop_rate=0.04,
+                                  corrupt_rate=0.02), "faults_live")):
+        w = run(faults=plan, telemetry=True)
+        rec[name] = dict(wall_s=w,
+                         overhead_pct=round(100 * (w - base) / base, 1))
+    return rec
+
+
+def bench_resilience(scale: str = "ci", profile: bool = False) -> dict:
+    rec = dict(scale=scale, fault_smoke=fault_smoke(scale),
+               kill_resume=kill_resume_smoke(scale),
+               recovery=recovery_smoke())
+    if profile:
+        rec["profile"] = profile_resilience(scale)
+    _merge(rec, key=f"resilience_{scale}")
+    return rec
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="ci", choices=list(ENGINE_SCALES))
+    ap.add_argument("--profile", action="store_true")
+    args = ap.parse_args()
+    print(json.dumps(bench_resilience(args.scale, profile=args.profile),
+                     indent=1))

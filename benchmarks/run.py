@@ -98,6 +98,38 @@ def bench_engine_backends(scale: str, profile: bool = False) -> None:
     _csv("engine_backend", "parity", r["parity"])
     for backend, v in r["livelock_detector"].items():
         _csv("engine_backend", f"livelock_{backend}", v)
+    if "resilience_profile" in r:
+        pr = r["resilience_profile"]
+        for k in ("ckpt_every_1", "ckpt_every_2", "faults_zero_rate",
+                  "faults_live"):
+            _csv("resilience_profile", k, f'wall_s={pr[k]["wall_s"]}',
+                 f'overhead_pct={pr[k]["overhead_pct"]}')
+
+
+def bench_faults(scale: str, profile: bool = False) -> None:
+    """Resilience gates (DESIGN §9): seeded fault stream converging
+    exact via repair, kill-and-resume bit-exactness, livelock recovery
+    via escalation — both backends (results/bench_engine.json)."""
+    from benchmarks.resilience_smoke import bench_resilience
+    r = bench_resilience(scale, profile=profile)
+    for backend, b in r["fault_smoke"].items():
+        _csv("fault_smoke", backend, b["status"], f'cycles={b["cycles"]}',
+             f'dropped={b["dropped"]}', f'duplicated={b["duplicated"]}',
+             f'corrupted={b["corrupted"]}',
+             f'blackout_hits={b["blackout_hits"]}')
+    for backend, b in r["kill_resume"].items():
+        _csv("kill_resume", backend, b["status"],
+             f'resumed_at={b["resumed_at"]}')
+    rc = r["recovery"]
+    _csv("livelock_recovery", rc["status"],
+         f'escalated_lanes={rc["escalated_lanes"]}',
+         f'attempts={rc["attempts"]}', f'wedge_cycle={rc["wedge_cycle"]}')
+    if profile:
+        pr = r["profile"]
+        for k in ("ckpt_every_1", "ckpt_every_2", "faults_zero_rate",
+                  "faults_live"):
+            _csv("resilience_profile", k, f'wall_s={pr[k]["wall_s"]}',
+                 f'overhead_pct={pr[k]["overhead_pct"]}')
 
 
 def bench_dist(scale: str) -> None:
@@ -174,24 +206,41 @@ def main() -> None:
                     choices=["ci", "mid", "paper"])
     ap.add_argument("--only", default=None,
                     help="increments|energy|allocator|activation|skew|"
-                         "lanes|throughput|engine|dist|kernels|roofline")
+                         "lanes|throughput|engine|faults|dist|kernels|"
+                         "roofline")
     ap.add_argument("--profile", action="store_true",
-                    help="telemetry-on engine runs: overhead + Chrome "
-                         "trace + congestion heatmap under results/profile/")
+                    help="telemetry-on engine runs (overhead + Chrome "
+                         "trace + congestion heatmap under "
+                         "results/profile/) and the resilience cost "
+                         "profile (checkpoint cadence + fault deltas)")
     args = ap.parse_args()
     pathlib.Path("results").mkdir(exist_ok=True)
     print("benchmark,fields...", flush=True)
-    if args.only in (None, "kernels"):
-        bench_kernels()
-    if args.only in (None, "roofline"):
-        bench_roofline()
-    if args.only in (None, "engine"):
-        bench_engine_backends(args.scale, profile=args.profile)
-    if args.only in (None, "dist"):
-        bench_dist(args.scale)
-    if args.only is None or args.only not in ("kernels", "roofline",
-                                              "engine", "dist"):
-        bench_paper(args.scale, args.only)
+    try:
+        if args.only in (None, "kernels"):
+            bench_kernels()
+        if args.only in (None, "roofline"):
+            bench_roofline()
+        if args.only in (None, "engine"):
+            bench_engine_backends(args.scale, profile=args.profile)
+        if args.only in (None, "faults"):
+            bench_faults(args.scale, profile=args.profile)
+        if args.only in (None, "dist"):
+            bench_dist(args.scale)
+        if args.only is None or args.only not in ("kernels", "roofline",
+                                                  "engine", "faults",
+                                                  "dist"):
+            bench_paper(args.scale, args.only)
+    except Exception as e:
+        # a LivelockError message carries the flight-recorder wedge
+        # report — print it whole so the CI log shows WHERE the machine
+        # wedged, and exit nonzero so the job goes red (DESIGN §9)
+        from repro.core.engine import LivelockError
+        if isinstance(e, LivelockError):
+            print(f"\nLIVELOCK (cycle {e.cycle}, chunk {e.chunk}):\n{e}",
+                  file=sys.stderr, flush=True)
+            raise SystemExit(3)
+        raise
 
 
 if __name__ == "__main__":

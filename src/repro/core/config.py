@@ -72,6 +72,20 @@ class EngineConfig:
                                   # device per increment pass; older
                                   # frames are overwritten ring-style
 
+    # --- resilience (repro.resilience, DESIGN §9) ---
+    faults: object = None         # FaultPlan | None: seeded deterministic
+                                  # fault injection (drop / blackout /
+                                  # duplicate / corrupt) applied inside
+                                  # cycle_body, plus message seals and the
+                                  # end-of-increment repair pass; None ->
+                                  # no fault code is traced at all,
+                                  # bit-exact with the pre-fault engine
+    ingest_guard: bool = False    # throttle load_stream admission from
+                                  # the tm_hiw action-queue hi-water mark
+                                  # (requires telemetry) so ingest backs
+                                  # off under pressure instead of
+                                  # manufacturing a livelock
+
     @property
     def n_cells(self) -> int:
         return self.height * self.width
@@ -159,6 +173,12 @@ class EngineConfig:
         assert len(cells) == self.rhizome_cap, \
             "rhizome_stride collides rhizome roots on one cell; pick a " \
             "rhizome_cap with distinct k*stride mod n_cells"
+        if self.faults is not None:
+            self.faults.validate(self)
+        if self.ingest_guard:
+            assert self.telemetry, \
+                "ingest_guard needs the tm_hiw telemetry plane " \
+                "(set telemetry=True, DESIGN §9)"
         if self.rhizome_cap > 1:
             # a rhizome activation drains up to futq_cap deferred inserts
             # back onto the LOCAL action queue in one action; the drain

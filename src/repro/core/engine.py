@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import NamedTuple
 
 import jax
@@ -44,8 +45,8 @@ from repro.core.config import EngineConfig
 from repro.core.exec_stage import phase0_stage, staging_stage
 from repro.core.ingest import io_stage, load_stream
 from repro.core.routing import hop_stage, park_stage
-from repro.core.state import (TM_L_OCC, MachineState, init_state, root_addr,
-                              self_cell_grid)
+from repro.core.state import (TM_HOP, TM_HW_AQ, TM_L_OCC, MachineState,
+                              init_state, root_addr, self_cell_grid)
 from repro.obs import frames as obs_frames
 
 
@@ -289,6 +290,10 @@ class StreamingEngine:
         self.state = init_state(cfg, init_vals=self.app.init_val)
         self.total_cycles = 0
         self.totals = dict(hops=0, execs=0, stalls=0, allocs=0)
+        # resilience bookkeeping (DESIGN §9)
+        self.stream_pos = 0        # increments completed == checkpoint step
+        self.recovery_log = []     # one dict per livelock recovery attempt
+        self._ingest_budget = None  # tm_hiw-gated admission limit
 
     # -- seeding (e.g. the BFS source vertex gets level 0 pre-stream) --
     def seed(self, vid: int, value: float, val_idx: int = 0):
@@ -303,7 +308,9 @@ class StreamingEngine:
     # -- stream one increment of edges and run to quiescence --
     def run_increment(self, edges: np.ndarray,
                       max_cycles: int | None = None,
-                      collect_traces: bool = False) -> IncrementResult:
+                      collect_traces: bool = False,
+                      recover=None, ckpt=None,
+                      ckpt_block: bool = False) -> IncrementResult:
         """Ingest ``edges`` and run to quiescence.
 
         ``collect_traces=False`` (default) is the sync-free fast path:
@@ -313,14 +320,84 @@ class StreamingEngine:
         are empty).  ``collect_traces=True`` uses the chunked host loop
         and returns the full per-cycle activity traces (jnp chunk
         runner; identical state/totals either way).
+
+        Resilience knobs (DESIGN §9) — both default off, and the
+        defaults leave the run bit-identical to the pre-resilience
+        driver:
+
+        * ``ckpt`` — a ``train.checkpoint.Checkpointer``: publish a
+          durable boundary checkpoint (step = ``stream_pos``) BEFORE
+          ingesting this increment.  Default is async, so serialization
+          overlaps the device loop below; ``ckpt_block=True`` publishes
+          synchronously.  A crash mid-increment restores the boundary
+          and replays this increment bit-exactly.
+        * ``recover`` — a ``resilience.RecoveryPolicy``: on
+          :class:`LivelockError`, roll back to the boundary snapshot,
+          escalate lanes/queue_cap per the policy, back off
+          exponentially, and retry the increment.  Every attempt is
+          appended to ``self.recovery_log`` (with the flight-recorder
+          wedge report when telemetry is on); once the budget is spent
+          the error re-raises with the attempt log in the message.
+          A successful escalation keeps the relieved config for the
+          rest of the stream (graceful degradation, not a rollback).
         """
+        if ckpt is not None:
+            self.checkpoint(ckpt, block=ckpt_block)
+        if recover is None:
+            res = self._run_increment(edges, max_cycles, collect_traces)
+            self.stream_pos += 1
+            return res
+        from repro.resilience.recover import migrate_state
+        base_cfg = self.cfg
+        # the boundary snapshot IS the recovery point: quiescent, so
+        # migrate_state can re-seat it under an escalated config
+        snapshot = jax.device_get(self.state)
+        for attempt in range(recover.max_attempts + 1):
+            try:
+                res = self._run_increment(edges, max_cycles, collect_traces)
+                self.stream_pos += 1
+                return res
+            except LivelockError as e:
+                entry = dict(attempt=attempt, cycle=e.cycle, chunk=e.chunk,
+                             lanes=self.cfg.lanes,
+                             queue_cap=self.cfg.queue_cap,
+                             wedge=str(e))
+                self.recovery_log.append(entry)
+                if attempt >= recover.max_attempts:
+                    log = "\n".join(
+                        f"  attempt {n['attempt']}: lanes={n['lanes']} "
+                        f"queue_cap={n['queue_cap']} wedged at cycle "
+                        f"{n['cycle']}" for n in self.recovery_log)
+                    raise LivelockError(
+                        f"{e}\nrecovery budget exhausted "
+                        f"({recover.max_attempts} escalations):\n{log}",
+                        cycle=e.cycle, chunk=e.chunk,
+                        frames=e.frames) from e
+                new_cfg = recover.escalate(base_cfg, attempt + 1)
+                delay = recover.backoff_s * (2 ** attempt)
+                entry["backoff_s"] = delay
+                entry["escalated_to"] = dict(lanes=new_cfg.lanes,
+                                             queue_cap=new_cfg.queue_cap)
+                if delay:
+                    time.sleep(delay)
+                self.cfg = new_cfg
+                self.state = migrate_state(new_cfg, self.app, snapshot)
+                self._ingest_budget = None  # re-learn under the new sizing
+
+    def _run_increment(self, edges, max_cycles, collect_traces):
         cfg = self.cfg
         limit = max_cycles or cfg.max_cycles
-        self.state, spill = load_stream(cfg, self.state, edges)
+        self.state, spill = load_stream(cfg, self.state, edges,
+                                        limit=self._ingest_limit())
         self.state = self.state._replace(stat_hops=jnp.int32(0),
                                          stat_exec=jnp.int32(0),
                                          stat_stall=jnp.int32(0),
                                          stat_allocs=jnp.int32(0))
+        if cfg.faults is not None:
+            # fault counters reset with the stat_* scalars: the §9 loss
+            # detector reconciles per increment
+            self.state = self.state._replace(
+                flt=jnp.zeros_like(self.state.flt))
         if cfg.telemetry:
             # the telemetry planes reset with the stat_* scalars so the
             # final frame of the increment reconciles exactly (DESIGN §8)
@@ -330,8 +407,41 @@ class StreamingEngine:
                 tm_hiw=jnp.zeros_like(self.state.tm_hiw))
         if collect_traces:
             return self._run_increment_traced(spill, limit)
-        cycles = 0
         rings = []
+        cycles, q, noprog, counters, spill = self._device_passes(
+            cfg, spill, limit, rings)
+        frames = obs_frames.FrameLog.from_rings(rings) if rings else None
+        if not q and noprog >= LIVELOCK_CHUNKS:
+            # Message-dependent-deadlock detector: YX DOR keeps the
+            # NETWORK acyclic, but the execute stage (pop -> emit ->
+            # channel) can close a protocol cycle when buffers are sized
+            # below the workload's dependency depth.  Fail loudly with
+            # sizing advice — and the flight recorder's wedge report when
+            # telemetry is on — instead of silently dropping work.
+            _raise_livelock(cfg, cycle=cycles, chunk=cycles // cfg.chunk,
+                            frames=frames)
+        if len(spill):
+            raise RuntimeError(self._spill_msg(limit, spill))
+        if cfg.faults is not None:
+            cycles = self._repair_rounds(limit, cycles, rings)
+            counters = tuple(int(x) for x in jax.device_get((
+                self.state.stat_hops, self.state.stat_exec,
+                self.state.stat_stall, self.state.stat_allocs)))
+            frames = (obs_frames.FrameLog.from_rings(rings)
+                      if rings else None)
+        if cfg.ingest_guard:
+            # learn the admission budget for the NEXT increment from this
+            # increment's action-queue hi-water marks
+            self._update_ingest_budget()
+        return self._finish_increment(
+            cycles, *counters,
+            np.zeros(0, np.int32), np.zeros(0, np.int32), frames)
+
+    def _device_passes(self, cfg, spill, limit, rings, cycles=0):
+        """Sync-free device passes until quiescence with the spill fully
+        drained, or until the cycle/livelock budget trips.  Returns
+        ``(cycles, quiescent, noprog, (hops, execs, stalls, allocs),
+        spill)`` — counters are the increment-cumulative stat scalars."""
         while True:
             self.state, out, ring = _increment_device_loop(
                 cfg, self.app, self.state, limit - cycles)
@@ -347,24 +457,13 @@ class StreamingEngine:
                 # io_stream_cap overflow residue: the loaded prefix is
                 # fully consumed at quiescence, so the next pass has the
                 # whole IO capacity again (DESIGN §4.2)
-                self.state, spill = load_stream(cfg, self.state, spill)
+                if cfg.ingest_guard:
+                    self._update_ingest_budget()
+                self.state, spill = load_stream(cfg, self.state, spill,
+                                                limit=self._ingest_limit())
                 continue
             break
-        frames = obs_frames.FrameLog.from_rings(rings) if rings else None
-        if not q and noprog >= LIVELOCK_CHUNKS:
-            # Message-dependent-deadlock detector: YX DOR keeps the
-            # NETWORK acyclic, but the execute stage (pop -> emit ->
-            # channel) can close a protocol cycle when buffers are sized
-            # below the workload's dependency depth.  Fail loudly with
-            # sizing advice — and the flight recorder's wedge report when
-            # telemetry is on — instead of silently dropping work.
-            _raise_livelock(cfg, cycle=cycles, chunk=cycles // cfg.chunk,
-                            frames=frames)
-        if len(spill):
-            raise RuntimeError(self._spill_msg(limit, spill))
-        return self._finish_increment(
-            cycles, hops, execs, stalls, allocs,
-            np.zeros(0, np.int32), np.zeros(0, np.int32), frames)
+        return cycles, q, noprog, (hops, execs, stalls, allocs), spill
 
     def _run_increment_traced(self, spill, limit) -> IncrementResult:
         """Chunked host loop with per-cycle activity traces (the original
@@ -407,6 +506,12 @@ class StreamingEngine:
                                 chunk=cycles // cfg.chunk, frames=frames)
         if len(spill):
             raise RuntimeError(self._spill_msg(limit, spill))
+        if cfg.faults is not None:
+            # debug path reuses the device-loop repair passes (per-cycle
+            # traces cover the faulty run; the repair tail is untraced)
+            cycles = self._repair_rounds(limit, cycles, [])
+        if cfg.ingest_guard:
+            self._update_ingest_budget()
         frames = (obs_frames.FrameLog.from_rings([jax.device_get(ring)])
                   if ring is not None else None)
         return self._finish_increment(
@@ -414,6 +519,160 @@ class StreamingEngine:
             int(self.state.stat_stall), int(self.state.stat_allocs),
             np.concatenate(act) if act else np.zeros(0, np.int32),
             np.concatenate(flt) if flt else np.zeros(0, np.int32), frames)
+
+    # -- detection + repair: the §8 invariants as a loss detector (§9) --
+
+    def _loss_count(self) -> int:
+        """Messages lost this increment: the injected-fault counters,
+        cross-checked (when telemetry is on) against the §8 conservation
+        invariant — link departures (``stat_hops``) minus link deliveries
+        (sum of the ``TM_HOP`` plane) is exactly the drop count, with no
+        reference to the injection bookkeeping."""
+        from repro.resilience.faults import FLT_CORRUPT, FLT_DROP
+        flt = np.asarray(jax.device_get(self.state.flt))
+        lost = int(flt[FLT_DROP]) + int(flt[FLT_CORRUPT])
+        if self.cfg.telemetry:
+            gap = int(self.state.stat_hops) - int(
+                np.asarray(self.state.tm_cell)[..., TM_HOP].sum())
+            lost = max(lost, gap + int(flt[FLT_CORRUPT]))
+        return lost
+
+    def _repair_entries(self) -> np.ndarray:
+        """Stream rows re-injecting every finite durable value at every
+        active rhizome root of its vertex: ``(vid, -(k+1), value_bits)``
+        sentinel rows (negative dst => OP_REPAIR, see io_stage).  The
+        forced re-diffusion of all of them, run to quiescence over the
+        intact edge storage, is one full monotone relaxation sweep from
+        correct sources — it reaches the exact fixpoint in a single
+        fault-free round (DESIGN §9)."""
+        cfg, app = self.cfg, self.app
+        vids = np.arange(cfg.n_vertices, dtype=np.int64)[None, :]
+        ks = np.arange(cfg.rhizome_cap, dtype=np.int64)[:, None]
+        r, c, s = rhizome_rcs(cfg, vids, ks)                     # [R, n]
+        vals = np.asarray(self.state.vals[..., 0])[r, c, s]
+        on = np.asarray(self.state.rhz_on)[r, c, s]
+        on[0, :] = True                # canonical root is always live
+        v = functools.reduce(app.combine, vals)                  # [n]
+        tgt = on & (v != np.float32(app.init_val))[None, :]
+        kk, vv = np.nonzero(tgt)
+        bits = np.ascontiguousarray(
+            v[vv].astype(np.float32)).view(np.int32)
+        return np.stack([vv.astype(np.int32),
+                         (-(kk + 1)).astype(np.int32), bits],
+                        axis=1).astype(np.int32)
+
+    def _repair_rounds(self, limit, cycles, rings) -> int:
+        """Bounded graceful-degradation pass: when the loss detector
+        fires at end of increment, re-inject the durable values as
+        OP_REPAIR traffic and re-run to quiescence under the plan's
+        zero-rate twin (``FaultPlan.safe()`` — recovery rides a reliable
+        transport, and the twin keeps every leaf shape so the state
+        flows into the repair jit without reshaping)."""
+        cfg = self.cfg
+        plan = cfg.faults
+        if self._loss_count() == 0:
+            return cycles
+        safe_cfg = dataclasses.replace(cfg, faults=plan.safe())
+        for _ in range(plan.max_repair_rounds):
+            before = self._loss_count()
+            entries = self._repair_entries()
+            if not len(entries):
+                break                  # nothing durable to re-diffuse
+            self.state, spill = load_stream(cfg, self.state, entries)
+            cycles, q, noprog, _, spill = self._device_passes(
+                safe_cfg, spill, limit, rings, cycles)
+            if not q and noprog >= LIVELOCK_CHUNKS:
+                _raise_livelock(
+                    safe_cfg, cycle=cycles, chunk=cycles // cfg.chunk,
+                    frames=(obs_frames.FrameLog.from_rings(rings)
+                            if rings else None))
+            if len(spill):
+                raise RuntimeError(self._spill_msg(limit, spill))
+            if self._loss_count() == before:
+                break                  # clean round: fixpoint reached
+        else:
+            raise RuntimeError(
+                f"repair budget exhausted: {plan.max_repair_rounds} "
+                "rounds each lost messages — the repair transport is "
+                "expected to be fault-free (FaultPlan.safe()); see "
+                "DESIGN.md §9")
+        return cycles
+
+    # -- ingest guard: tm_hiw-gated admission (DESIGN §9) --
+
+    def _ingest_limit(self) -> int | None:
+        return self._ingest_budget if self.cfg.ingest_guard else None
+
+    def _update_ingest_budget(self) -> None:
+        """AIMD-style admission control from the action-queue hi-water
+        telemetry: halve the per-load admission budget when any cell's AQ
+        crested within the reserve band of ``queue_cap`` (the §4.2
+        pre-wedge signature), double it back while the fabric runs below
+        half the band."""
+        cfg = self.cfg
+        ceiling = cfg.queue_cap - cfg.aq_reserve - cfg.sys_reserve
+        cap = cfg.io_cells * cfg.io_stream_cap
+        hiw = int(np.asarray(jax.device_get(
+            self.state.tm_hiw))[..., TM_HW_AQ].max())
+        cur = cap if self._ingest_budget is None else self._ingest_budget
+        if hiw >= ceiling:
+            cur = max(cfg.io_cells, cur // 2)
+        elif hiw < max(1, ceiling // 2):
+            cur = min(cap, cur * 2)
+        self._ingest_budget = cur
+
+    # -- durable state: boundary checkpoint / restore (DESIGN §9) --
+
+    def checkpoint(self, ckpt, step: int | None = None,
+                   block: bool = True) -> int:
+        """Publish the full machine pytree + stream cursor + config
+        fingerprint through ``ckpt`` (a ``train.checkpoint.
+        Checkpointer``).  Only sound at an increment boundary (which is
+        where ``run_increment(ckpt=...)`` calls it).  ``block=False``
+        snapshots to host and serializes on the writer thread."""
+        from repro.resilience.checkpoint import stream_manifest
+        step = self.stream_pos if step is None else step
+        save = ckpt.save if block else ckpt.save_async
+        save(step, self.state._asdict(), extra=stream_manifest(self))
+        return step
+
+    @classmethod
+    def restore(cls, cfg: EngineConfig, app, ckpt,
+                step: int | None = None, shardings=None,
+                strict: bool = True, verify: bool = True):
+        """Rebuild an engine from a boundary checkpoint: replaying the
+        remaining stream from ``engine.stream_pos`` reproduces the
+        uninterrupted run bit-exactly.  ``shardings`` may be a
+        ``MachineState`` of NamedShardings (e.g. ``cca_state_shardings``)
+        for elastic re-sharding onto the current mesh."""
+        from repro.resilience.checkpoint import config_fingerprint
+        eng = cls(cfg, app)
+        like = jax.tree.map(np.asarray, eng.state._asdict())
+        sh = (shardings._asdict() if isinstance(shardings, MachineState)
+              else shardings)
+        tree, extra, step = ckpt.restore(like, step=step, shardings=sh,
+                                         verify=verify)
+        if strict:
+            fp = config_fingerprint(eng.cfg)
+            if extra.get("config") != fp:
+                raise ValueError(
+                    f"checkpoint step {step} was saved under config "
+                    f"{extra.get('config')}, engine is {fp}: restoring "
+                    "across configs would reinterpret the address/queue "
+                    "layout silently (strict=False only for post-mortem "
+                    "inspection)")
+            if extra.get("app") != eng.app.name:
+                raise ValueError(
+                    f"checkpoint app '{extra.get('app')}' != engine app "
+                    f"'{eng.app.name}'")
+        if sh is None:
+            tree = {k: jnp.asarray(v) for k, v in tree.items()}
+        eng.state = MachineState(**tree)
+        eng.stream_pos = int(extra.get("stream_pos", step))
+        eng.total_cycles = int(extra.get("total_cycles", 0))
+        eng.totals.update({k: int(v) for k, v in
+                           extra.get("totals", {}).items()})
+        return eng
 
     def _spill_msg(self, limit, spill) -> str:
         # never drop work silently: the cycle limit ran out before the

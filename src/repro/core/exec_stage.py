@@ -40,8 +40,9 @@ from repro.core.alloc import (choose_alloc_cell, rhizome_addr,
 from repro.core.apps import DiffusionApp
 from repro.core.config import EngineConfig
 from repro.core.msg import (MSG_WORDS, OP_ALLOC, OP_APP, OP_INSERT_EDGE,
-                            OP_LINK_RHIZOME, OP_RHIZOME_FWD, OP_SET_FUTURE,
-                            TB_AQ_SELF, f2i, i2f, make_msg)
+                            OP_LINK_RHIZOME, OP_REPAIR, OP_RHIZOME_FWD,
+                            OP_SET_FUTURE, TB_AQ_SELF, f2i, i2f, make_msg,
+                            msg_seal, seal_msg)
 from repro.core.routing import deliver, msg_lane, yx_target_buffer
 from repro.core.state import (G_NULL, G_PENDING, G_SET, MachineState,
                               TM_ALLOC, TM_BCAST, TM_EXEC, TM_PARK, TM_STAGE,
@@ -94,6 +95,13 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     cellid = rows * W + cols
 
     is_app = op == OP_APP
+    if cfg.faults is not None:
+        # an active OP_REPAIR emits exactly like OP_APP (edge diffusion,
+        # sibling broadcast, ghost forward) — only the ghost forward
+        # keeps the OP_REPAIR opcode so the *whole* chain re-diffuses
+        # its edge shard even where the relax changed nothing (§9)
+        is_rp = op == OP_REPAIR
+        is_app = is_app | is_rp
     is_sf = op == OP_SET_FUTURE
     is_rf = op == OP_RHIZOME_FWD
     is_appl = is_app | is_rf       # app-like: edge diffusion + ghost forward
@@ -110,7 +118,9 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     app_edge_msg = make_msg(OP_APP, e_dst, f2i(app.edge_value(st.cemit, e_w)))
     gs = sel(st.gstate, slot)
     ga = sel(st.gaddr, slot)
-    app_fwd_msg = make_msg(OP_APP, ga, f2i(st.cemit))
+    fwd_op = OP_APP if cfg.faults is None else \
+        jnp.where(is_rp, OP_REPAIR, OP_APP)
+    app_fwd_msg = make_msg(fwd_op, ga, f2i(st.cemit))
     # sibling broadcast window [ne, ne + n_bcast) — canonical roots of
     # multi-root vertices only (phase0 accounted for it in cT)
     rss = sel(st.rstate, slot)
@@ -153,6 +163,12 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
                                              app_edge_msg)))
     emis = jnp.where(is_appl[..., None], appl_msg,
                      jnp.where(is_sf[..., None], sf_msg, st.cout))
+    if cfg.faults is not None:
+        # staging is the single chokepoint every compute-emitted message
+        # passes through (phase-0's cout rides the is_sf/is_appl=False
+        # branch above), so sealing here + at the IO injector covers the
+        # whole network (§9); park/rotate/hop paths copy words verbatim
+        emis = seal_msg(emis)
 
     # ---- app ghost-forward onto a *pending* future: coalesce into the
     #      per-slot monotone forward register (never stalls — the future
@@ -243,6 +259,16 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     has = idle & (st.aq_n > 0)
     m = rings.ring_peek(st.aq, st.aq_head)  # [H,W,MSG]
     op = jnp.where(has, m[..., 0], 0)
+    if cfg.faults is not None:
+        # seal validation (DESIGN §9): an app/repair flit whose XOR seal
+        # no longer matches was corrupted in transit — discard it as a
+        # counted no-op rather than relax with a poisoned value (a
+        # corrupted-low level could never be un-relaxed from a monotone
+        # fixpoint).  Protocol traffic is never corrupted by a FaultPlan
+        # so restricting the check keeps legacy in-state messages valid.
+        from repro.resilience.faults import FLT_CORRUPT, is_droppable
+        bad = has & is_droppable(op) & (msg_seal(m) != m[..., 4])
+        op = jnp.where(bad, 0, op)
     dst, a0, a1 = m[..., 1], m[..., 2], m[..., 3]
     slot = dst % S
 
@@ -259,6 +285,10 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     is_sf = op == OP_SET_FUTURE
     is_rf = op == OP_RHIZOME_FWD
     is_lr = op == OP_LINK_RHIZOME
+    # recovery-path relax (DESIGN §9): like OP_APP but *forces* the
+    # re-diffusion emissions even when the relax did not change the
+    # value — rebuilding downstream state lost to dropped flits
+    is_rp = (op == OP_REPAIR) if cfg.faults is not None else None
 
     # secondary rhizome slots are statically reserved but start inactive;
     # an insert reaching one before its link-ack must defer (DESIGN §4.5)
@@ -286,6 +316,8 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     p_room &= pop; p_fwd &= pop; p_defer &= pop; p_null &= pop
     p_rlink &= pop; p_rdef &= pop
     is_app &= pop; is_alc &= pop; is_sf &= pop; is_rf &= pop; is_lr &= pop
+    if is_rp is not None:
+        is_rp &= pop
 
     # -- room: insert the edge into this RPVO node
     eidx = jnp.minimum(ne, E - 1)
@@ -328,6 +360,10 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
 
     # ---------------- APP / RHIZOME-FWD relax (Listing 5) ----------------
     relaxing = is_app | is_rf
+    app_like = is_app
+    if is_rp is not None:
+        relaxing = relaxing | is_rp
+        app_like = is_app | is_rp
     new_vals, changed = app.relax(vals_s, i2f(a0))
     changed = changed & relaxing
     vals = put(st.vals, slot, new_vals, relaxing)
@@ -335,9 +371,10 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     # broadcasts to the R-1 sibling rhizomes — in parallel, replacing the
     # serial forward walk of the chain design (DESIGN §4.5).  The root
     # learns it is multi-root when it handles the first OP_LINK_RHIZOME.
-    n_bcast = jnp.where(is_app & (slot < cfg.root_slots) & (rs == G_SET),
+    n_bcast = jnp.where(app_like & (slot < cfg.root_slots) & (rs == G_SET),
                         cfg.rhizome_cap - 1, 0)
-    app_T = jnp.where(changed,
+    forced = changed if is_rp is None else changed | is_rp
+    app_T = jnp.where(forced,
                       ne + n_bcast + (gs != G_NULL).astype(jnp.int32), 0)
     cemit_new = new_vals[..., 0]
 
@@ -415,7 +452,7 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     cmsg = jnp.where(pop[..., None], m, st.cmsg)
     cphase = jnp.where(pop, 1, st.cphase)
     cT = jnp.where(pop, T, st.cT)
-    cemit = jnp.where(is_app | is_rf, cemit_new, st.cemit)
+    cemit = jnp.where(relaxing, cemit_new, st.cemit)
     cdrain = jnp.where(pop, jnp.where(is_rf, drain_n, 0), st.cdrain)
 
     st = st._replace(
@@ -429,6 +466,9 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
         stat_exec=st.stat_exec + jnp.sum(done0.astype(jnp.int32)),
         stat_allocs=st.stat_allocs + jnp.sum(alc_room.astype(jnp.int32)),
         stat_stall=st.stat_stall + jnp.sum(rotate.astype(jnp.int32)))
+    if cfg.faults is not None:
+        st = st._replace(flt=st.flt.at[FLT_CORRUPT].add(
+            jnp.sum(bad.astype(jnp.int32))))
     if cfg.telemetry:
         tm = st.tm_cell
         tm = tm.at[..., TM_EXEC].add(pop.astype(jnp.int32))

@@ -15,13 +15,14 @@ import numpy as np
 from repro.core import rings
 from repro.core.alloc import rhizome_addr
 from repro.core.config import EngineConfig
-from repro.core.msg import OP_INSERT_EDGE, make_msg
+from repro.core.msg import OP_INSERT_EDGE, OP_REPAIR, make_msg, seal_msg
 from repro.core.routing import (deliver, manhattan_hops, msg_lane,
                                 yx_target_buffer)
 from repro.core.state import MachineState, TM_IO, root_addr
 
 
-def load_stream(cfg: EngineConfig, st: MachineState, edges: np.ndarray):
+def load_stream(cfg: EngineConfig, st: MachineState, edges: np.ndarray,
+                limit: int | None = None):
     """Distribute an increment's edges round-robin over the IO cells.
 
     edges: int32 [m, 3] rows of (src vid, dst vid, weight bits).
@@ -31,6 +32,12 @@ def load_stream(cfg: EngineConfig, st: MachineState, edges: np.ndarray):
     residual-stream capacity are returned (in arrival order) instead of
     asserting — the engine re-loads them once the loaded prefix has been
     consumed (spill-to-next-pass residue, DESIGN §4.2).
+
+    ``limit`` caps the number of NEW edges admitted this call (residue
+    always reloads in full); the rest spill.  This is the ingest-guard
+    backpressure knob (DESIGN §9): the engine lowers the limit when the
+    ``tm_hiw`` action-queue hi-water mark shows the fabric saturating,
+    so ingest throttles instead of wedging the machine.
     """
     IO, L = cfg.io_cells, cfg.io_stream_cap
     io_edges = np.asarray(st.io_edges)
@@ -45,13 +52,15 @@ def load_stream(cfg: EngineConfig, st: MachineState, edges: np.ndarray):
         new_n[i] = len(rem)
     edges = np.asarray(edges, np.int32).reshape(-1, 3)
     spill = []
+    admitted = 0
     for k, e in enumerate(edges):
         i = k % IO
-        if new_n[i] >= L:
+        if new_n[i] >= L or (limit is not None and admitted >= limit):
             spill.append(e)
             continue
         new_edges[i, new_n[i]] = e
         new_n[i] += 1
+        admitted += 1
     st = st._replace(io_edges=jnp.asarray(new_edges),
                      io_n=jnp.asarray(new_n),
                      io_pos=jnp.zeros_like(st.io_pos))
@@ -86,6 +95,19 @@ def io_stage(cfg: EngineConfig, st: MachineState, rows, cols):
     best = jnp.argmin(dist + pref * half_diam, axis=1)
     tgt = jnp.take_along_axis(cand, best[:, None], axis=1)[:, 0]
     msg = make_msg(OP_INSERT_EDGE, tgt, root_addr(cfg, cur[:, 1]), cur[:, 2])
+    if cfg.faults is not None:
+        # repair-injection sentinel (DESIGN §9): a stream row with a
+        # NEGATIVE dst word is not an edge but a recovery relax —
+        # ``(vid, -(k+1), value_bits)`` re-injects the durable value of
+        # ``vid`` at its rhizome root ``k`` as an OP_REPAIR, reusing the
+        # whole IO admission/backpressure machinery for the repair pass
+        rp = cur[:, 1] < 0
+        k_rp = -cur[:, 1] - 1
+        rp_tgt = rhizome_addr(cfg, cur[:, 0], k_rp)
+        tgt = jnp.where(rp, rp_tgt, tgt)
+        msg = jnp.where(rp[:, None],
+                        make_msg(OP_REPAIR, rp_tgt, cur[:, 2]), msg)
+        msg = seal_msg(msg)
 
     tb = yx_target_buffer(cfg, tgt // S, r0, c0)     # [IO]
 

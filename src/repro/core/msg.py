@@ -29,7 +29,13 @@ OP_RHIZOME_FWD = 5    # args: (value bits, -, -)   sibling-rhizome value sync;
                       # also the link-ack that activates a pending rhizome root
 OP_LINK_RHIZOME = 6   # args: (requester rhizome addr, -, -) sent to the
                       # canonical root to request activation of a sibling
-N_OPS = 7
+OP_REPAIR = 7         # args: (value bits, -, -)   recovery-path relax
+                      # (DESIGN §9): relaxes like OP_APP but *forces*
+                      # re-diffusion over the slot's local edge shard and
+                      # down the ghost chain even when the value did not
+                      # change — injected by the engine's repair pass to
+                      # rebuild state lost to dropped/corrupted app flits
+N_OPS = 8
 
 # ---- directions (mesh links) ----
 DIR_N, DIR_S, DIR_W, DIR_E = 0, 1, 2, 3
@@ -71,6 +77,22 @@ def msg_dst(m):
 
 def msg_arg(m, i):
     return m[..., 2 + i]
+
+
+def msg_seal(m):
+    """Integrity seal of a message: XOR of words 0..3 (word 4 is the
+    seal slot — unused as an operand by every opcode).  Set at the two
+    network-injection chokepoints (staging emissions, IO inserts) when
+    ``cfg.faults`` is active; validated by the execute stage at pop so a
+    transit-corrupted flit is discarded as a counted no-op instead of
+    poisoning the monotone fixpoint (DESIGN §9)."""
+    return m[..., 0] ^ m[..., 1] ^ m[..., 2] ^ m[..., 3]
+
+
+def seal_msg(m):
+    """Return ``m`` with word 4 set to :func:`msg_seal`."""
+    return jnp.concatenate(
+        [m[..., :4], msg_seal(m)[..., None]], axis=-1)
 
 
 EMPTY_MSG = (0, 0, 0, 0, 0)

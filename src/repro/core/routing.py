@@ -283,6 +283,17 @@ def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
     Links are arbitrated in fixed direction order N,S,W,E so multiple
     arrivals at one cell in the same cycle are sequenced
     deterministically.  Returns ``(state, hops_this_cycle)``.
+
+    Fault injection (``cfg.faults``, DESIGN §9) lives entirely inside
+    this stage: blackout windows mask a link's admissibility (pure
+    delay), and the drop/duplicate/corrupt hazards act on the *granted*
+    flit — a dropped flit is popped by the sender but never delivered
+    (it still counts as a link departure in ``hops``, which is what
+    makes the §8 conservation invariant ``sum(TM_HOP) == stat_hops`` a
+    real loss detector: deliveries fall short of departures by exactly
+    the drop count), a duplicated flit is delivered but *not* popped
+    (the sender retransmits it later), and a corrupted flit has one bit
+    of its value word flipped for the seal check to catch at pop.
     """
     Q, L, LC = cfg.queue_cap, cfg.lanes, cfg.lane_capacity
     hops = jnp.int32(0)
@@ -290,6 +301,14 @@ def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
     ch, ch_n, ch_head = st.ch, st.ch_n, st.ch_head
     ch_rr = st.ch_rr
     tm_cell, tm_lane = st.tm_cell, st.tm_lane
+    flt = st.flt
+    if cfg.faults is not None:
+        from repro.resilience.faults import (FLT_BLACKOUT, FLT_CORRUPT,
+                                             FLT_DROP, FLT_DUP, fault_hash16,
+                                             is_droppable)
+        plan = cfg.faults
+        # link id = cell * 4 + dir: one hash stream per physical link
+        linkid0 = (rows * cfg.width + cols) * N_DIRS
     liota = rings._iota(L)
 
     for d in (DIR_N, DIR_S, DIR_W, DIR_E):
@@ -316,6 +335,20 @@ def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
             adm = adm | ((tb == dd)
                          & rings.ring_free(ch_n[:, :, dd], LC))
         adm_s = shift_to_sender(occ_r & adm, d)                 # [H,W,L]
+        if cfg.faults is not None:
+            # blackout windows: the named (cell, dir) link grants
+            # nothing while the machine cycle is inside the window —
+            # lossless delay, so no detection/repair is ever needed
+            for (br, bc, bd, b0, bn) in plan.blackouts:
+                if bd != d:
+                    continue
+                win = (st.cycle >= b0) & (st.cycle < b0 + bn)
+                cell = jnp.zeros((cfg.height, cfg.width), bool) \
+                    .at[br, bc].set(True)
+                dead = cell & win
+                flt = flt.at[FLT_BLACKOUT].add(jnp.sum(
+                    (dead[..., None] & adm_s).astype(jnp.int32)))
+                adm_s = adm_s & ~dead[..., None]
 
         # round-robin grant at the sender link: the admissible lane
         # closest after the rotating pointer wins the flit slot
@@ -332,11 +365,36 @@ def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
         oh_g = liota == g[..., None]                            # [H,W,L]
         sel = jnp.sum(jnp.where(oh_g[..., None], heads, 0), axis=2)
 
+        # per-link fault decisions on the granted flit (sender frame);
+        # no-op (and never traced) when cfg.faults is None
+        dropm_s = dupm_s = None
+        if cfg.faults is not None:
+            drp = is_droppable(sel[..., 0]) & granted            # [H,W]
+            link = linkid0 + d
+            if plan.drop_thr:
+                h1 = fault_hash16(plan.seed, st.cycle, link, 1)
+                dropm_s = drp & (h1 < plan.drop_thr)
+            if plan.dup_thr:
+                h2_ = fault_hash16(plan.seed, st.cycle, link, 2)
+                dupm_s = drp & (h2_ < plan.dup_thr)
+            if plan.corrupt_thr:
+                h3 = fault_hash16(plan.seed, st.cycle, link, 3)
+                corrm = drp & (h3 < plan.corrupt_thr)
+                if dropm_s is not None:
+                    corrm = corrm & ~dropm_s
+                # flip one value-word bit in transit; the msg_seal check
+                # at pop converts this into a detected discard
+                bit = jnp.left_shift(jnp.int32(1), 8 + (h3 & 7))
+                sel = sel.at[..., 2].set(
+                    jnp.where(corrm, sel[..., 2] ^ bit, sel[..., 2]))
+
         # deliver the granted head at the receiver (re-derives tb/room;
         # granted implies admissible, so acceptance == grant)
         msg_g = shift_to_receiver(sel, d)
         want_r = shift_to_receiver(granted, d) & valid_receiver_mask(cfg, d)
         lane_g = shift_to_receiver(g, d)
+        dropm = (want_r & shift_to_receiver(dropm_s, d)
+                 if dropm_s is not None else None)
         tb_g = yx_target_buffer(cfg, msg_g[..., 1] // cfg.slots, rows, cols)
         room_g = jnp.where(is_protocol(msg_g[..., 0]),
                            rings.ring_free(aq_n, Q, cfg.aq_reserve),
@@ -344,16 +402,33 @@ def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
                                            + cfg.sys_reserve))
         aq, aq_n, ch, ch_n, accepted_r = deliver(
             cfg, aq, aq_n, aq_head, ch, ch_n, ch_head,
-            msg_g, tb_g, lane_g, want_r, room_g)
-        hops = hops + jnp.sum(accepted_r.astype(jnp.int32))
+            msg_g, tb_g, lane_g,
+            want_r if dropm is None else want_r & ~dropm, room_g)
+        # departed = the flit left the sender's lane this cycle: delivered
+        # OR dropped on the link.  hops/stat_hops count departures, so
+        # with faults on, departures - deliveries == dropped (the §8/§9
+        # conservation detector); without faults the two are identical.
+        departed_r = accepted_r if dropm is None else accepted_r | dropm
+        popped_r = departed_r
+        if dupm_s is not None:
+            dupm = accepted_r & shift_to_receiver(dupm_s, d)
+            popped_r = departed_r & ~dupm   # sender keeps a dup'd flit
+        if cfg.faults is not None:
+            if dropm is not None:
+                flt = flt.at[FLT_DROP].add(
+                    jnp.sum(dropm.astype(jnp.int32)))
+            if dupm_s is not None:
+                flt = flt.at[FLT_DUP].add(jnp.sum(dupm.astype(jnp.int32)))
+        hops = hops + jnp.sum(departed_r.astype(jnp.int32))
         # pop the granted lane at the sender; advance the arbiter pointer
         # past the winner (round-robin fairness)
-        acc_s = shift_to_sender(accepted_r, d)
+        acc_s = shift_to_sender(popped_r, d)
+        adv_s = shift_to_sender(departed_r, d)
         n2, h2 = rings.ring_pop(ch_n[:, :, d], ch_head[:, :, d], LC,
                                 acc_s[..., None] & oh_g)
         ch_n = ch_n.at[:, :, d].set(n2)
         ch_head = ch_head.at[:, :, d].set(h2)
-        ch_rr = ch_rr.at[:, :, d].set(jnp.where(acc_s, (g + 1) % L, rr))
+        ch_rr = ch_rr.at[:, :, d].set(jnp.where(adv_s, (g + 1) % L, rr))
         if cfg.telemetry:
             # per-lane grant/blocked attribution at the sender link and
             # per-cell flit arrivals at the receiver (DESIGN §8)
@@ -366,4 +441,5 @@ def hop_stage(cfg: EngineConfig, st: MachineState, rows, cols):
                 accepted_r.astype(jnp.int32))
 
     return st._replace(aq=aq, aq_n=aq_n, ch=ch, ch_n=ch_n, ch_head=ch_head,
-                       ch_rr=ch_rr, tm_cell=tm_cell, tm_lane=tm_lane), hops
+                       ch_rr=ch_rr, tm_cell=tm_cell, tm_lane=tm_lane,
+                       flt=flt), hops

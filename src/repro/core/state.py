@@ -121,6 +121,13 @@ class MachineState(NamedTuple):
     tm_cell: jax.Array     # [H,W,N_TM_STAGES] i32 per-cell stage activity
     tm_lane: jax.Array     # [H,W,4,L,N_TM_LANE] i32 lane occ/grant/blocked
     tm_hiw: jax.Array      # [H,W,N_TM_HIW] i32 AQ / park-ring hi-water
+    # --- fault-injection counters (repro.resilience, DESIGN §9):
+    #     [N_FLT] i32 (FLT_* indices in resilience/faults.py) when
+    #     cfg.faults is set, else a [1] dummy — same pattern as the
+    #     telemetry planes, so faults=None stays bit-exact and the
+    #     Pallas megakernel carries the leaf through its generic
+    #     flattening with zero kernel changes ---
+    flt: jax.Array
 
 
 def init_state(cfg: EngineConfig, init_vals: float | np.ndarray = 1e9) -> MachineState:
@@ -166,6 +173,7 @@ def init_state(cfg: EngineConfig, init_vals: float | np.ndarray = 1e9) -> Machin
         tm_lane=z32(*((H, W, N_DIRS, VL) if cfg.telemetry
                       else (1, 1, 1, 1)), N_TM_LANE),
         tm_hiw=z32(*((H, W) if cfg.telemetry else (1, 1)), N_TM_HIW),
+        flt=z32(4 if cfg.faults is not None else 1),
     )
 
 

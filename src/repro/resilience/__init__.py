@@ -1,0 +1,33 @@
+"""Resilience: durable streaming state, deterministic fault injection,
+detection + graceful degradation (DESIGN §9).
+
+Three layers, all riding the existing machinery:
+
+* **Durable state** — ``StreamingEngine.checkpoint/restore`` route the
+  ``MachineState`` pytree + stream cursor + config fingerprint through
+  ``train/checkpoint.Checkpointer`` at increment boundaries
+  (:mod:`repro.resilience.checkpoint`).
+* **Fault injection** — a seeded, static :class:`FaultPlan` applied
+  inside ``cycle_body`` (drop / blackout / duplicate / corrupt), with
+  message seals and the ``flt`` counter leaf
+  (:mod:`repro.resilience.faults`).
+* **Detection + degradation** — the §8 conservation invariants as an
+  end-of-increment loss detector driving a bounded ``OP_REPAIR`` pass;
+  :class:`RecoveryPolicy` escalation on livelock with boundary-state
+  migration (:mod:`repro.resilience.recover`); ``tm_hiw``-gated ingest
+  admission.
+"""
+from repro.resilience.checkpoint import (CKPT_KIND, config_fingerprint,
+                                         stream_manifest)
+from repro.resilience.faults import (FLT_BLACKOUT, FLT_CORRUPT, FLT_DROP,
+                                     FLT_DUP, N_FLT, FaultPlan, fault_hash16,
+                                     is_droppable)
+from repro.resilience.recover import (STORAGE_LEAVES, RecoveryPolicy,
+                                      assert_boundary, migrate_state)
+
+__all__ = [
+    "CKPT_KIND", "FLT_BLACKOUT", "FLT_CORRUPT", "FLT_DROP", "FLT_DUP",
+    "FaultPlan", "N_FLT", "RecoveryPolicy", "STORAGE_LEAVES",
+    "assert_boundary", "config_fingerprint", "fault_hash16",
+    "is_droppable", "migrate_state", "stream_manifest",
+]

@@ -1,0 +1,44 @@
+"""Durable streaming state: engine <-> train/checkpoint glue (DESIGN §9).
+
+``StreamingEngine.checkpoint`` / ``.restore`` route the full
+``MachineState`` pytree — plus the stream cursor and a config
+fingerprint — through the seed's :class:`repro.train.checkpoint.
+Checkpointer` (atomic tmp+rename publish, async writer thread, per-leaf
+checksums, elastic re-shard on load).  This module holds the small
+pieces that are not engine methods: the fingerprint and the manifest
+schema helpers.
+
+The fingerprint covers every ``EngineConfig`` field (including the
+nested ``FaultPlan``): restoring under a different config would
+reinterpret addresses/queue layouts silently, so ``restore`` refuses a
+mismatch unless explicitly told ``strict=False`` (e.g. to inspect a
+checkpoint post-mortem).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+CKPT_KIND = "cca_stream"
+
+
+def config_fingerprint(cfg) -> str:
+    """Stable 16-hex-digit digest of every config field (nested
+    dataclasses included)."""
+    d = dataclasses.asdict(cfg)
+    blob = json.dumps(d, sort_keys=True, default=repr)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def stream_manifest(engine) -> dict:
+    """The ``extra`` dict saved next to the state leaves: everything the
+    host driver needs to resume mid-stream bit-exactly."""
+    return dict(
+        kind=CKPT_KIND,
+        config=config_fingerprint(engine.cfg),
+        app=engine.app.name,
+        stream_pos=engine.stream_pos,
+        total_cycles=engine.total_cycles,
+        totals=dict(engine.totals),
+    )

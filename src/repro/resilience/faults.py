@@ -1,0 +1,159 @@
+"""Deterministic fault injection for the cycle engine (DESIGN §9).
+
+A :class:`FaultPlan` is a *static*, seeded description of the hazards to
+inject inside ``cycle_body`` — it rides on :class:`EngineConfig` (a jit
+static argument), so the faulty cycle compiles to a different XLA
+program while ``cfg.faults is None`` stays bit-identical to the
+pre-fault engine (the same pattern the telemetry planes use, DESIGN §8).
+Because the injection happens inside the shared cycle semantics, the
+Pallas cycle megakernel inherits it through the generic leaf flattening
+with zero kernel changes.
+
+Fault decisions are pure counter hashes of ``(seed, cycle, link,
+salt)`` — no PRNG state rides in ``MachineState`` — so both backends
+make bit-identical decisions and a restored checkpoint replays the
+exact same fault sequence (what makes kill-and-resume testable under
+fire).
+
+The four hazards:
+
+* **drop** — a granted application flit vanishes on the link: the sender
+  pops, the receiver never sees it.  Only *reloss-safe* traffic
+  (``OP_APP`` / ``OP_REPAIR`` monotone relaxes, :func:`is_droppable`) is
+  ever dropped: losing an ``OP_INSERT_EDGE`` would lose graph structure
+  and losing a protocol/continuation message would wedge the Fig. 3/4
+  state machines — neither is recoverable from durable values, so a
+  real system must (and ours does) transport them reliably.
+* **blackout** — a named ``(row, col, dir)`` link is dead for a cycle
+  window: its lanes are never granted.  Pure delay, lossless, applies
+  to all traffic.
+* **duplicate** — the receiver takes the flit but the sender keeps it
+  (a retransmission): the message is delivered again later.  Safe for
+  the same opcode set (monotone relaxes are idempotent).
+* **corrupt** — one bit of the value word of a granted application flit
+  is flipped in transit.  Every message carries an XOR seal over its
+  other words (``msg.msg_seal``, set at the two injection chokepoints);
+  the execute stage validates the seal at pop and discards corrupted
+  messages as counted no-ops, converting corruption into a *detected*
+  drop instead of silently poisoning the monotone fixpoint (a
+  corrupted-low BFS level could never be un-relaxed).
+
+Injection is accounted in the ``flt`` state leaf (``FLT_*`` indices) —
+the end-of-increment loss detector cross-checks it against the §8
+conservation invariant (``stat_hops`` counts link *departures*,
+``sum(TM_HOP)`` counts *deliveries*; the gap is exactly the drop count)
+and triggers the bounded repair pass (``engine._repair_rounds``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.msg import OP_APP
+
+# OP_REPAIR lives in msg.py; imported lazily below to avoid a cycle at
+# module import time (msg imports nothing from here).
+
+# ---- fault-counter leaf indices: ``MachineState.flt`` [N_FLT] i32 ----
+FLT_DROP = 0       # app flits dropped on a link
+FLT_DUP = 1        # app flits delivered twice (sender kept its copy)
+FLT_CORRUPT = 2    # corrupted flits caught by the seal check at pop
+FLT_BLACKOUT = 3   # occupied link-cycles suppressed by a blackout window
+N_FLT = 4
+
+# 16-bit decision space: a rate r fires where hash16 < int(r * 65536)
+_HASH_BITS = 16
+_HASH_SPACE = 1 << _HASH_BITS
+
+# 32-bit odd mixing constants (Murmur3/xxhash finalizers), written as
+# their int32 two's-complement values so jnp.int32 accepts them
+_M1 = -1640531535   # 0x9E3779B1  (golden-ratio increment)
+_M2 = -2048144789   # 0x85EBCA6B
+_M3 = -1028477387   # 0xC2B2AE35
+_M4 = 668265263     # 0x27D4EB2F
+
+
+def _srl(x, n):
+    return jax.lax.shift_right_logical(x, jnp.int32(n))
+
+
+def fault_hash16(seed: int, cycle, link, salt: int):
+    """Deterministic per-(cycle, link, salt) hash in ``[0, 65536)``.
+
+    ``seed``/``salt`` are static python ints; ``cycle`` (scalar) and
+    ``link`` (any int32 array, e.g. ``cell * N_DIRS + dir``) are traced.
+    int32 multiply/add wrap mod 2^32 under XLA, which is exactly the
+    mixing we want; the final mask keeps the value non-negative.
+    """
+    k = jnp.int32((seed * _M4 + salt * 40503) & 0x7FFFFFFF)
+    h = (jnp.asarray(cycle, jnp.int32) * jnp.int32(_M1)
+         + jnp.asarray(link, jnp.int32) * jnp.int32(_M2) + k)
+    h = (h ^ _srl(h, 16)) * jnp.int32(_M2)
+    h = (h ^ _srl(h, 13)) * jnp.int32(_M3)
+    h = h ^ _srl(h, 16)
+    return h & jnp.int32(_HASH_SPACE - 1)
+
+
+def is_droppable(op):
+    """True where ``op`` may legally be dropped/duplicated/corrupted:
+    the monotone-relax application traffic, re-derivable from durable
+    vertex values (see module docstring).  Broadcasts over ``op``."""
+    from repro.core.msg import OP_REPAIR
+    return (op == OP_APP) | (op == OP_REPAIR)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Static, seeded fault schedule (rides on ``EngineConfig.faults``).
+
+    Rates are per granted application flit per link per cycle;
+    ``blackouts`` is a tuple of ``(row, col, dir, start_cycle,
+    n_cycles)`` link outages (``dir`` is a ``msg.DIR_*`` code, cycle
+    window measured on the machine's monotone ``cycle`` counter).
+    ``max_repair_rounds`` bounds the end-of-increment repair pass.
+
+    Frozen + all-hashable fields: ``EngineConfig`` is a jit static
+    argument, so the plan must be too.
+    """
+    seed: int = 0
+    drop_rate: float = 0.0
+    dup_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    blackouts: tuple = ()
+    max_repair_rounds: int = 3
+
+    # ---- static 16-bit thresholds (0 compiles the hazard away) ----
+    @property
+    def drop_thr(self) -> int:
+        return int(self.drop_rate * _HASH_SPACE)
+
+    @property
+    def dup_thr(self) -> int:
+        return int(self.dup_rate * _HASH_SPACE)
+
+    @property
+    def corrupt_thr(self) -> int:
+        return int(self.corrupt_rate * _HASH_SPACE)
+
+    def safe(self) -> "FaultPlan":
+        """The *reliable-transport* twin of this plan: same seed and
+        repair budget, zero hazard rates, no blackouts.  The repair pass
+        runs under it (recovery traffic uses acknowledged delivery in
+        BLADYG-style systems, DESIGN §9) — crucially the state *shapes*
+        (the ``flt`` leaf) are unchanged, so the boundary state flows
+        into the repair jit without a host round-trip."""
+        return dataclasses.replace(self, drop_rate=0.0, dup_rate=0.0,
+                                   corrupt_rate=0.0, blackouts=())
+
+    def validate(self, cfg) -> None:
+        for r in (self.drop_rate, self.dup_rate, self.corrupt_rate):
+            assert 0.0 <= r < 1.0, f"fault rate {r} outside [0, 1)"
+        assert self.max_repair_rounds >= 1
+        for b in self.blackouts:
+            r, c, d, start, n = b
+            assert 0 <= r < cfg.height and 0 <= c < cfg.width, \
+                f"blackout {b}: cell off-grid"
+            assert 0 <= d < 4, f"blackout {b}: bad direction"
+            assert n >= 1 and start >= 0, f"blackout {b}: bad window"

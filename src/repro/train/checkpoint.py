@@ -52,6 +52,11 @@ class Checkpointer:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: threading.Thread | None = None
+        self._exc: BaseException | None = None
+        # a crashed/killed writer leaves step_<N>.tmp behind; the rename
+        # publish means it is never a valid checkpoint — reclaim the disk
+        for stale in self.dir.glob("step_*.tmp"):
+            shutil.rmtree(stale, ignore_errors=True)
 
     # ----------------------------- save -----------------------------
 
@@ -66,15 +71,30 @@ class Checkpointer:
         self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                  tree)  # snapshot BEFORE returning
-        self._thread = threading.Thread(
-            target=self._write, args=(step, host_tree, extra or {}),
-            daemon=True)
+
+        def run():
+            # a daemon thread's exception would otherwise vanish into the
+            # interpreter's default hook and the save would be SILENTLY
+            # missing — capture it and surface from the next wait()/save
+            try:
+                self._write(step, host_tree, extra or {})
+            except BaseException as e:  # noqa: BLE001 — re-raised in wait
+                self._exc = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight async save; re-raise its exception, if any,
+        here on the caller's thread."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise RuntimeError(
+                "async checkpoint save failed (raised on the writer "
+                "thread)") from exc
 
     def _write(self, step: int, host_tree, extra: dict) -> None:
         names, leaves, _ = _flatten_with_names(host_tree)
