@@ -100,14 +100,52 @@ def congestion_section(heat: dict) -> str:
     return "\n".join(out)
 
 
+def serve_section(rec: dict) -> str:
+    """Render ``results/bench_serve.json`` (benchmarks.serve_bench): the
+    per-tenant table plus an ASCII latency-percentile bar chart."""
+    out = [f"scale={rec['scale']} qbatch={rec['qbatch']} "
+           f"batch_cycles={rec['batch_cycles']} "
+           f"serial_total={rec['serial_cycles_total']} "
+           f"speedup={rec['speedup']}x "
+           f"all_exact={rec['all_exact']} deferrals={rec['deferrals']}", ""]
+    lat_of = {r["slot"]: r.get("latency_cycles")
+              for r in rec.get("receipts", [])}
+    out += ["| slot | app | source | serial cycles | latency (cycles) | "
+            "exact |", "|---|---|---|---|---|---|"]
+    for q in rec["queries"]:
+        lat = lat_of.get(q["slot"])
+        out.append(f'| {q["slot"]} | {q["app"]} | {q["source"]} | '
+                   f'{q["serial_cycles"]} | '
+                   f'{"—" if lat is None else lat} | '
+                   f'{"yes" if q["exact"] else "NO"} |')
+    s = rec.get("latency", {})
+    if s.get("n"):
+        out += ["", "time-to-quiescence percentiles "
+                    f"(n={s['n']}, {s['unit']}):", "```"]
+        top = max(s[k] for k in ("p50", "p90", "p99", "max"))
+        for k in ("p50", "p90", "p99", "max"):
+            bar = "#" * max(1, int(40 * s[k] / max(top, 1)))
+            out.append(f"{k:>4} {s[k]:>10.0f} {bar}")
+        out.append("```")
+    return "\n".join(out)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="results/dryrun.json")
     ap.add_argument("--heatmap", default="results/profile/heatmap_jnp.json",
                     help="congestion-heatmap dump (benchmarks.run --profile)")
+    ap.add_argument("--serve-json", default="results/bench_serve.json",
+                    help="serving-bench record (benchmarks.run --only serve)")
     ap.add_argument("--section", default="all",
-                    choices=["all", "dryrun", "roofline", "congestion"])
+                    choices=["all", "dryrun", "roofline", "congestion",
+                             "serve"])
     args = ap.parse_args()
+    if args.section == "serve":
+        rec = json.loads(pathlib.Path(args.serve_json).read_text())
+        print(f"### Multi-tenant serving ({args.serve_json})\n")
+        print(serve_section(rec))
+        return
     if args.section == "congestion":
         heat = json.loads(pathlib.Path(args.heatmap).read_text())
         print(f"### Congestion heatmaps ({args.heatmap})\n")

@@ -132,6 +132,33 @@ def bench_faults(scale: str, profile: bool = False) -> None:
                  f'overhead_pct={pr[k]["overhead_pct"]}')
 
 
+def bench_serve(scale: str) -> None:
+    """Multi-tenant query serving (repro.mq, DESIGN §10): Q=8 mixed
+    BFS/SSSP/CC/widest batch over a live R-MAT stream vs Q serial runs
+    (results/bench_serve.json).  Fails loudly if any tenant's values
+    diverge from its single-query run or the aggregate speedup falls
+    under 2x — the CI serve-smoke gate."""
+    from benchmarks.serve_bench import bench_serve as run_serve
+    r = run_serve(scale)
+    for qrec in r["queries"]:
+        _csv("serve_query", f'slot={qrec["slot"]}', qrec["app"],
+             f'source={qrec["source"]}',
+             f'serial_cycles={qrec["serial_cycles"]}',
+             "exact" if qrec["exact"] else "MISMATCH")
+    _csv("serve_batch", f'qbatch={r["qbatch"]}',
+         f'batch_cycles={r["batch_cycles"]}',
+         f'serial_total={r["serial_cycles_total"]}',
+         f'speedup={r["speedup"]}',
+         f'p50={r["p50_cycles"]}', f'p99={r["p99_cycles"]}',
+         f'deferrals={r["deferrals"]}')
+    if not r["all_exact"]:
+        raise SystemExit("bench_serve: per-query values diverged from "
+                         "the single-query runs")
+    if r["speedup"] < 2.0:
+        raise SystemExit(f'bench_serve: aggregate speedup {r["speedup"]} '
+                         "< 2x over serial runs")
+
+
 def bench_dist(scale: str) -> None:
     """Sharded-CCA chunk throughput at 1/2/4/8 fake host devices."""
     from benchmarks.dist_scaling import run_scaling
@@ -206,8 +233,8 @@ def main() -> None:
                     choices=["ci", "mid", "paper"])
     ap.add_argument("--only", default=None,
                     help="increments|energy|allocator|activation|skew|"
-                         "lanes|throughput|engine|faults|dist|kernels|"
-                         "roofline")
+                         "lanes|throughput|engine|faults|dist|serve|"
+                         "kernels|roofline")
     ap.add_argument("--profile", action="store_true",
                     help="telemetry-on engine runs (overhead + Chrome "
                          "trace + congestion heatmap under "
@@ -227,9 +254,11 @@ def main() -> None:
             bench_faults(args.scale, profile=args.profile)
         if args.only in (None, "dist"):
             bench_dist(args.scale)
+        if args.only in (None, "serve"):
+            bench_serve(args.scale)
         if args.only is None or args.only not in ("kernels", "roofline",
                                                   "engine", "faults",
-                                                  "dist"):
+                                                  "dist", "serve"):
             bench_paper(args.scale, args.only)
     except Exception as e:
         # a LivelockError message carries the flight-recorder wedge

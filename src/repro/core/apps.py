@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -38,16 +39,54 @@ class DiffusionApp:
     edge_value: Callable
     # vals[VN] -> bool : propagate on edge-insert? (Listing 4, line 7)
     propagate_on_insert: Callable
-    init_val: float = 1e9
+    # neutral element of relax ("unreached"): relax(v, init_val) must be a
+    # no-op.  A tuple gives per-query init values (qbatch > 1 composites —
+    # tuples, not arrays, keep the app hashable for the jit static args)
+    init_val: float | tuple = 1e9
     n_vals: int = 1
     # host-side merge of one vertex's values across its rhizome roots;
     # must agree with relax's fixpoint direction (min for the bundled apps)
     combine: Callable = np.minimum
+    # coalescing rule of the deferred app-forward register (DESIGN §4.4):
+    # merges queued forwards onto a pending future; must be relax's meet
+    # (min for min-monotone apps, max for the maximin widest-path app)
+    fwd_merge: Callable = jnp.minimum
+    # neutral element of fwd_merge (loses every merge); per-query tuple ok
+    fwd_neutral: float | tuple = 1e9
+    # query-batch width (repro.mq, DESIGN §10): > 1 marks a composite app
+    # whose relax/edge_value act on the whole [..., qbatch] value vector
+    qbatch: int = 1
+    # the per-slot scalar apps of a qbatch > 1 composite (else empty)
+    slot_apps: tuple = ()
+
+
+def neutral_vec(vals):
+    """A [Q] constant vector assembled from scalar literals only.
+
+    ``jnp.asarray(tuple)`` would embed a float32[Q] constant in the
+    jaxpr, which the Pallas cycle megakernel rejects (kernels may not
+    capture array constants).  Building it as iota + unrolled scalar
+    selects keeps every constant a literal, so the same cycle_body
+    traces on both backends.  Scalar inputs pass through unchanged.
+    """
+    if not isinstance(vals, tuple):
+        return jnp.float32(vals)
+    idx = jax.lax.iota(jnp.int32, len(vals))
+    out = jnp.zeros((len(vals),), jnp.float32)
+    for q, v in enumerate(vals):
+        out = jnp.where(idx == q, jnp.float32(v), out)
+    return out
 
 
 def _min_relax(vals, incoming):
     new0 = jnp.minimum(vals[..., 0], incoming)
     changed = incoming < vals[..., 0]
+    return vals.at[..., 0].set(new0), changed
+
+
+def _max_relax(vals, incoming):
+    new0 = jnp.maximum(vals[..., 0], incoming)
+    changed = incoming > vals[..., 0]
     return vals.at[..., 0].set(new0), changed
 
 
@@ -82,4 +121,36 @@ INGEST_ONLY = DiffusionApp(
     propagate_on_insert=lambda vals: jnp.zeros(vals.shape[:-1], bool),
 )
 
-APPS = {a.name: a for a in (BFS, SSSP, CC, INGEST_ONLY)}
+# Widest path (maximin bottleneck capacity): the first max-monotone app —
+# relax keeps the LARGEST bottleneck seen, an edge caps the path at
+# min(path, w), sources seed +INF.  Proves the frame generalizes across
+# fixpoint directions (Besta et al. taxonomy): every knob that hard-coded
+# "min" (host combine, forward-register merge, neutral elements) flips.
+# Idempotent like the min trio, so ghost-chain forwards and rhizome
+# broadcasts of post-relax value snapshots stay sound (unlike sum/count
+# relaxes — k-core / delta-PageRank need a residual protocol, DESIGN §10).
+WIDEST = DiffusionApp(
+    name="widest",
+    relax=_max_relax,
+    edge_value=lambda v, w: jnp.minimum(v, w),
+    propagate_on_insert=lambda vals: vals[..., 0] > 0.0,
+    init_val=0.0,
+    combine=np.maximum,
+    fwd_merge=jnp.maximum,
+    fwd_neutral=0.0,
+)
+
+# Most-reliable path (max-product of edge reliabilities in (0, 1]):
+# max-monotone like WIDEST but multiplicative along edges.
+RELIABLE = DiffusionApp(
+    name="reliable",
+    relax=_max_relax,
+    edge_value=lambda v, w: v * w,
+    propagate_on_insert=lambda vals: vals[..., 0] > 0.0,
+    init_val=0.0,
+    combine=np.maximum,
+    fwd_merge=jnp.maximum,
+    fwd_neutral=0.0,
+)
+
+APPS = {a.name: a for a in (BFS, SSSP, CC, INGEST_ONLY, WIDEST, RELIABLE)}

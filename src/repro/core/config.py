@@ -53,6 +53,13 @@ class EngineConfig:
 
     # --- app ---
     n_vals: int = 1               # per-slot application values (BFS: level)
+    qbatch: int = 1               # query-batch width (repro.mq, DESIGN §10):
+                                  # the vertex value slot carries one value
+                                  # per concurrent query and app-like
+                                  # messages widen to vector payloads so one
+                                  # diffusion wave serves all tenants.  1 =
+                                  # the classic single-query engine,
+                                  # bit-exact with the pre-mq machine.
 
     # --- engine ---
     max_cycles: int = 1_000_000
@@ -133,6 +140,16 @@ class EngineConfig:
         return self.park_cap if self.park_cap > 0 else self.chan_cap
 
     @property
+    def msg_words(self) -> int:
+        # message record width in int32 words (DESIGN §10): the classic
+        # 5-word record, plus one extension word per query slot beyond the
+        # first.  Payload slot 0 stays in word 2 and the seal stays in
+        # word 4, so the qbatch == 1 layout is byte-identical to the
+        # pre-mq flit (see core/msg.py).
+        from repro.core.msg import MSG_WORDS
+        return MSG_WORDS + max(0, self.qbatch - 1)
+
+    @property
     def aq_reserve(self) -> int:
         # Reserved action-queue slots so the active action's *local*
         # emissions always complete -> no self-deadlock (see DESIGN 4.2).
@@ -173,6 +190,18 @@ class EngineConfig:
         assert len(cells) == self.rhizome_cap, \
             "rhizome_stride collides rhizome roots on one cell; pick a " \
             "rhizome_cap with distinct k*stride mod n_cells"
+        assert self.qbatch >= 1, "qbatch must be >= 1"
+        assert self.qbatch <= 32, \
+            "qbatch > 32 overflows the int32 qsel bitmask (msg word 3, " \
+            "DESIGN §10); shard tenants over several sessions instead"
+        if self.qbatch > 1:
+            assert self.faults is None, \
+                "faults + qbatch > 1 is unsupported: the OP_REPAIR io " \
+                "sentinel rows carry a single value word (DESIGN §9/§10); " \
+                "run fault injection on a qbatch=1 engine"
+            assert self.n_vals == self.qbatch, \
+                "qbatch > 1 requires n_vals == qbatch (the query axis IS " \
+                "the value axis; StreamingEngine sets both from the app)"
         if self.faults is not None:
             self.faults.validate(self)
         if self.ingest_guard:

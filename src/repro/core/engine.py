@@ -285,9 +285,11 @@ class StreamingEngine:
     def __init__(self, cfg: EngineConfig, app: str | DiffusionApp = "bfs"):
         self.cfg = cfg
         self.app = APPS[app] if isinstance(app, str) else app
-        cfg = dataclasses.replace(cfg, n_vals=self.app.n_vals)
+        cfg = dataclasses.replace(cfg, n_vals=self.app.n_vals,
+                                  qbatch=self.app.qbatch)
         self.cfg = cfg
-        self.state = init_state(cfg, init_vals=self.app.init_val)
+        self.state = init_state(cfg, init_vals=self.app.init_val,
+                                fwd_init=self.app.fwd_neutral)
         self.total_cycles = 0
         self.totals = dict(hops=0, execs=0, stalls=0, allocs=0)
         # resilience bookkeeping (DESIGN §9)
@@ -393,6 +395,12 @@ class StreamingEngine:
                                          stat_exec=jnp.int32(0),
                                          stat_stall=jnp.int32(0),
                                          stat_allocs=jnp.int32(0))
+        if cfg.qbatch > 1:
+            # per-query relax counters reset per increment so the mq
+            # session layer reads them as this-increment activity (§10);
+            # qlast persists — it is the absolute settle cycle per slot
+            self.state = self.state._replace(
+                qchg=jnp.zeros_like(self.state.qchg))
         if cfg.faults is not None:
             # fault counters reset with the stat_* scalars: the §9 loss
             # detector reconciles per increment
@@ -693,13 +701,18 @@ class StreamingEngine:
             frames=frames)
 
     # -- read back application values from the vertex objects --
-    def values(self, n: int | None = None, val_idx: int = 0) -> np.ndarray:
+    def values(self, n: int | None = None, val_idx: int = 0,
+               combine=None) -> np.ndarray:
         """Min-reduce over every rhizome root of each vertex.
 
         The canonical root always holds the tightest value (all external
         relaxes land there; siblings only receive its snapshots), so for
         the bundled monotone-min apps the reduce equals the canonical
         value — kept as a reduce so readback stays correct even mid-run.
+
+        ``combine`` overrides the app-level root reduce — a qbatch
+        composite passes the PER-SLOT combine of the query living in
+        ``val_idx`` (repro.mq readback, DESIGN §10).
         """
         cfg = self.cfg
         n = n or cfg.n_vertices
@@ -709,7 +722,7 @@ class StreamingEngine:
         ks = np.arange(cfg.rhizome_cap, dtype=np.int64)[:, None]
         r, c, s = rhizome_rcs(cfg, vids, ks)                     # [R, n]
         v = np.asarray(self.state.vals[..., val_idx])[r, c, s]
-        return functools.reduce(self.app.combine, v)
+        return functools.reduce(combine or self.app.combine, v)
 
     def vertex_object_stats(self) -> dict:
         """Diagnostics over the hierarchical vertex objects: ghost usage +

@@ -37,12 +37,13 @@ import jax.numpy as jnp
 from repro.core import rings
 from repro.core.alloc import (choose_alloc_cell, rhizome_addr,
                               rhizome_owner_vid)
-from repro.core.apps import DiffusionApp
+from repro.core.apps import DiffusionApp, neutral_vec
 from repro.core.config import EngineConfig
 from repro.core.msg import (MSG_WORDS, OP_ALLOC, OP_APP, OP_INSERT_EDGE,
                             OP_LINK_RHIZOME, OP_REPAIR, OP_RHIZOME_FWD,
                             OP_SET_FUTURE, TB_AQ_SELF, f2i, i2f, make_msg,
-                            msg_seal, seal_msg)
+                            make_qmsg, msg_qvals, msg_seal, pad_msg,
+                            qsel_mask, seal_msg)
 from repro.core.routing import deliver, msg_lane, yx_target_buffer
 from repro.core.state import (G_NULL, G_PENDING, G_SET, MachineState,
                               TM_ALLOC, TM_BCAST, TM_EXEC, TM_PARK, TM_STAGE,
@@ -86,6 +87,16 @@ def put(arr, slot, val, mask):
 def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
                   rows, cols):
     H, W, S, E = cfg.height, cfg.width, cfg.slots, cfg.edge_cap
+    QB, WM = cfg.qbatch, cfg.msg_words
+    # app-like message builder: classic scalar payload at qbatch == 1
+    # (bit-exact with the pre-mq trace), the full [..., QB] query-vector
+    # payload otherwise (DESIGN §10); wm pads non-app records to width
+    if QB == 1:
+        qmsg = lambda op_, dst_, val: make_msg(op_, dst_, f2i(val))
+        wm = lambda m_: m_
+    else:
+        qmsg = lambda op_, dst_, val: make_qmsg(op_, dst_, f2i(val))
+        wm = lambda m_: pad_msg(m_, WM)
     active = st.cvalid & (st.cphase >= 1) & (st.cphase <= st.cT)
 
     op = st.cmsg[..., 0]
@@ -115,12 +126,12 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     ohSE = (_oh(slot, S)[..., None] & _oh(ek, E)[..., None, :])  # [H,W,S,E]
     e_dst = jnp.sum(jnp.where(ohSE, st.edst, 0), axis=(2, 3))
     e_w = jnp.sum(jnp.where(ohSE, st.ew, 0.0), axis=(2, 3))
-    app_edge_msg = make_msg(OP_APP, e_dst, f2i(app.edge_value(st.cemit, e_w)))
+    app_edge_msg = qmsg(OP_APP, e_dst, app.edge_value(st.cemit, e_w))
     gs = sel(st.gstate, slot)
     ga = sel(st.gaddr, slot)
     fwd_op = OP_APP if cfg.faults is None else \
         jnp.where(is_rp, OP_REPAIR, OP_APP)
-    app_fwd_msg = make_msg(fwd_op, ga, f2i(st.cemit))
+    app_fwd_msg = qmsg(fwd_op, ga, st.cemit)
     # sibling broadcast window [ne, ne + n_bcast) — canonical roots of
     # multi-root vertices only (phase0 accounted for it in cT)
     rss = sel(st.rstate, slot)
@@ -129,8 +140,7 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     v_self = slot * cfg.n_cells + cellid           # vid owning a root slot
     sib = jnp.clip(kd - ne + 1, 1, cfg.rhizome_cap - 1 if cfg.rhizome_cap > 1
                    else 1)
-    bc_msg = make_msg(OP_RHIZOME_FWD, rhizome_addr(cfg, v_self, sib),
-                      f2i(st.cemit))
+    bc_msg = qmsg(OP_RHIZOME_FWD, rhizome_addr(cfg, v_self, sib), st.cemit)
     is_bcast = is_app & (kd >= ne) & (kd < ne + n_bcast)
     appl_is_fwd = is_appl & (kd >= ne + n_bcast) & (k >= st.cdrain)
 
@@ -142,20 +152,29 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
                       axis=2)                                # [H,W,FQ,3]
     fq_e = rings.ring_peek(fq_slot, fqh_cur)                 # [H,W,3]
     sf_is_ins = fq_e[..., 0] == OP_INSERT_EDGE
+    if QB == 1:
+        sf_fq_app = make_msg(OP_APP, ga, fq_e[..., 1])
+    else:
+        # deferred-queue entries carry one value word; the remaining
+        # query slots ride as the app's neutral element (no-op relaxes)
+        qn = jnp.broadcast_to(
+            f2i(neutral_vec(app.init_val))[1:], (H, W, QB - 1))
+        sf_fq_app = make_qmsg(OP_APP, ga,
+                              jnp.concatenate([fq_e[..., 1:2], qn], axis=-1))
     sf_fq_msg = jnp.where(
         sf_is_ins[..., None],
-        make_msg(OP_INSERT_EDGE, ga, fq_e[..., 1], fq_e[..., 2]),
-        make_msg(OP_APP, ga, fq_e[..., 1]))
+        wm(make_msg(OP_INSERT_EDGE, ga, fq_e[..., 1], fq_e[..., 2])),
+        sf_fq_app)
     sf_from_fq = is_sf & (fqn_cur > 0)
     sf_from_fwd = is_sf & (fqn_cur == 0)   # the coalesced forward
     fwd_here = sel(st.fwd_val, slot)
     sf_msg = jnp.where(sf_from_fq[..., None], sf_fq_msg,
-                       make_msg(OP_APP, ga, f2i(fwd_here)))
+                       qmsg(OP_APP, ga, fwd_here))
 
     # ---- rf activation drain: re-inject a deferred insert at this (now
     #      active) rhizome root — it is local by construction ----
     rf_drain = is_rf & (k < st.cdrain)
-    drain_msg = make_msg(OP_INSERT_EDGE, dst, fq_e[..., 1], fq_e[..., 2])
+    drain_msg = wm(make_msg(OP_INSERT_EDGE, dst, fq_e[..., 1], fq_e[..., 2]))
 
     appl_msg = jnp.where(rf_drain[..., None], drain_msg,
                          jnp.where(appl_is_fwd[..., None], app_fwd_msg,
@@ -175,8 +194,17 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     #      LCO merges dependent continuations, DESIGN §4.4) ----
     to_reg = active & appl_is_fwd & (gs == G_PENDING)
     ohreg = _oh(slot, S, to_reg)
-    fwd_val = jnp.where(ohreg, jnp.minimum(st.fwd_val, st.cemit[..., None]),
-                        st.fwd_val)
+    # the register coalesces with the app's own meet (min for the bundled
+    # min-monotone apps — the pre-mq jnp.minimum — max for widest-path)
+    if QB == 1:
+        fwd_val = jnp.where(ohreg,
+                            app.fwd_merge(st.fwd_val, st.cemit[..., None]),
+                            st.fwd_val)
+    else:
+        fwd_val = jnp.where(ohreg[..., None],
+                            app.fwd_merge(st.fwd_val,
+                                          st.cemit[..., None, :]),
+                            st.fwd_val)
     fwd_pending = st.fwd_pending | ohreg
 
     tb = yx_target_buffer(cfg, emis[..., 1] // S, rows, cols)
@@ -216,7 +244,7 @@ def staging_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     fq_n = put(st.fq_n, slot, n2, fq_pop)
     fq_head = put(st.fq_head, slot, h2, fq_pop)
     sf_clear = ok_total & sf_from_fwd
-    fwd_val = put(fwd_val, slot, jnp.float32(1e9), sf_clear)
+    fwd_val = put(fwd_val, slot, neutral_vec(app.fwd_neutral), sf_clear)
     fwd_pending = fwd_pending & ~_oh(slot, S, sf_clear)
 
     # ---- advance / retire ----
@@ -253,6 +281,8 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
                  rows, cols, busy_at_start):
     H, W, S, E = cfg.height, cfg.width, cfg.slots, cfg.edge_cap
     FQ, Q = cfg.futq_cap, cfg.queue_cap
+    QB, WM = cfg.qbatch, cfg.msg_words
+    wm = (lambda m_: m_) if QB == 1 else (lambda m_: pad_msg(m_, WM))
     cellid = rows * W + cols
 
     idle = ~busy_at_start
@@ -328,11 +358,18 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     nedges = st.nedges + _oh(slot, S, p_room).astype(jnp.int32)
     prop = app.propagate_on_insert(vals_s)
     ins_T = (p_room & prop).astype(jnp.int32)
-    ins_out = make_msg(OP_APP, a0, f2i(app.edge_value(vals_s[..., 0], i2f(a1))))
+    if QB == 1:
+        ins_out = make_msg(OP_APP, a0,
+                           f2i(app.edge_value(vals_s[..., 0], i2f(a1))))
+    else:
+        # the insert-propagate relax carries the whole query vector: one
+        # wave serves every tenant (DESIGN §10)
+        ins_out = make_qmsg(OP_APP, a0,
+                            f2i(app.edge_value(vals_s, i2f(a1))))
 
     # -- fwd: recursively propagate the insert to the ghost (Listing 6 l.29)
     ga_cur = sel(st.gaddr, slot)
-    fwd_out = make_msg(OP_INSERT_EDGE, ga_cur, a0, a1)
+    fwd_out = wm(make_msg(OP_INSERT_EDGE, ga_cur, a0, a1))
 
     # -- defer: enqueue the insert on the pending future (Fig. 4 step 3)
     # (rhizome-pending slots reuse the same queue: Fig. 4 step 3 again)
@@ -351,12 +388,16 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     tgt_cell = choose_alloc_cell(cfg, rows, cols, st.arot)
     arot = st.arot + p_null.astype(jnp.int32)
     null_out = make_msg(OP_ALLOC, tgt_cell * S, dst, f2i(vals_s[..., 0]))
+    if QB > 1:
+        # OP_ALLOC carries the requester's full value vector: word 3 is
+        # slot 0 (as ever), the extension words are slots 1.. (§10)
+        null_out = jnp.concatenate([null_out, f2i(vals_s[..., 1:])], axis=-1)
 
     # -- rlink: mark pending, request activation at the canonical root
     rstate = put(st.rstate, slot, G_PENDING, p_rlink)
     owner = rhizome_owner_vid(cfg, cellid, slot)
     owner_root = (owner % cfg.n_cells) * S + owner // cfg.n_cells
-    rlink_out = make_msg(OP_LINK_RHIZOME, owner_root, cellid * S + slot)
+    rlink_out = wm(make_msg(OP_LINK_RHIZOME, owner_root, cellid * S + slot))
 
     # ---------------- APP / RHIZOME-FWD relax (Listing 5) ----------------
     relaxing = is_app | is_rf
@@ -364,8 +405,19 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     if is_rp is not None:
         relaxing = relaxing | is_rp
         app_like = is_app | is_rp
-    new_vals, changed = app.relax(vals_s, i2f(a0))
-    changed = changed & relaxing
+    if QB == 1:
+        new_vals, changed = app.relax(vals_s, i2f(a0))
+        changed = changed & relaxing
+    else:
+        # vector relax over the query axis (DESIGN §10): the incoming
+        # payload spans all query slots; the qsel bitmask (word 3, 0 =
+        # all) masks de-selected slots to their app's neutral element so
+        # an admission re-seed relaxes exactly one tenant
+        inc = i2f(msg_qvals(m, QB))                       # [H,W,QB]
+        inc = jnp.where(qsel_mask(a1, QB), inc, neutral_vec(app.init_val))
+        new_vals, changed_q = app.relax(vals_s, inc)
+        changed_q = changed_q & relaxing[..., None]       # [H,W,QB]
+        changed = jnp.any(changed_q, axis=-1)
     vals = put(st.vals, slot, new_vals, relaxing)
     # a changed relax at a canonical root of a multi-root vertex also
     # broadcasts to the R-1 sibling rhizomes — in parallel, replacing the
@@ -376,7 +428,7 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     forced = changed if is_rp is None else changed | is_rp
     app_T = jnp.where(forced,
                       ne + n_bcast + (gs != G_NULL).astype(jnp.int32), 0)
-    cemit_new = new_vals[..., 0]
+    cemit_new = new_vals[..., 0] if QB == 1 else new_vals
 
     # -- rhizome-fwd extras: activate a pending/inactive sibling root and
     #    drain its deferred inserts back onto the local action queue.  The
@@ -399,27 +451,39 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     # remember the vertex is multi-root; ack with the current value (the
     # ack is itself an OP_RHIZOME_FWD, so it also syncs the new sibling)
     rstate = put(rstate, slot, G_SET, is_lr)
-    lr_out = make_msg(OP_RHIZOME_FWD, a0, f2i(vals_s[..., 0]))
+    if QB == 1:
+        lr_out = make_msg(OP_RHIZOME_FWD, a0, f2i(vals_s[..., 0]))
+    else:
+        lr_out = make_qmsg(OP_RHIZOME_FWD, a0, f2i(vals_s))
 
     # ---------------- ALLOC (system action) ----------------
     alc_room = is_alc & (st.nfree < S)
     alc_full = is_alc & ~(st.nfree < S)
     g_new = st.nfree
-    vals = put(vals, g_new,
-               jnp.full((H, W, cfg.n_vals), jnp.float32(app.init_val))
-               .at[..., 0].set(i2f(a1)), alc_room)
+    if QB == 1:
+        gseed = (jnp.full((H, W, cfg.n_vals), jnp.float32(app.init_val))
+                 .at[..., 0].set(i2f(a1)))
+    else:
+        # the allocation request carried the requester's whole value
+        # vector (word 3 + extension words), so the ghost starts synced
+        gseed = i2f(jnp.concatenate([a1[..., None], m[..., MSG_WORDS:]],
+                                    axis=-1))
+    vals = put(vals, g_new, gseed, alc_room)
     nedges = put(nedges, g_new, 0, alc_room)
     gaddr0 = put(st.gaddr, g_new, -1, alc_room)
     gstate = put(gstate, g_new, G_NULL, alc_room)
     fq_n = put(fq_n, g_new, 0, alc_room)
     fq_head = put(st.fq_head, g_new, 0, alc_room)
-    fwd_val = put(st.fwd_val, g_new, jnp.float32(1e9), alc_room)
+    fwd_val = put(st.fwd_val, g_new, neutral_vec(app.fwd_neutral), alc_room)
     fwd_pending = st.fwd_pending & ~_oh(g_new, S, alc_room)
     new_addr = cellid * S + st.nfree
     nfree = st.nfree + alc_room.astype(jnp.int32)
-    alc_ok_out = make_msg(OP_SET_FUTURE, a0, new_addr)
+    alc_ok_out = wm(make_msg(OP_SET_FUTURE, a0, new_addr))
     nxt_cell = (cellid + 1) % cfg.n_cells
     alc_fwd_out = make_msg(OP_ALLOC, nxt_cell * S, a0, a1)
+    if QB > 1:
+        alc_fwd_out = jnp.concatenate([alc_fwd_out, m[..., MSG_WORDS:]],
+                                      axis=-1)
 
     # ---------------- SET-FUTURE (continuation return, Fig. 3/4) ----------
     gaddr = put(gaddr0, slot, a0, is_sf)
@@ -452,7 +516,8 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
     cmsg = jnp.where(pop[..., None], m, st.cmsg)
     cphase = jnp.where(pop, 1, st.cphase)
     cT = jnp.where(pop, T, st.cT)
-    cemit = jnp.where(relaxing, cemit_new, st.cemit)
+    cemit = jnp.where(relaxing if QB == 1 else relaxing[..., None],
+                      cemit_new, st.cemit)
     cdrain = jnp.where(pop, jnp.where(is_rf, drain_n, 0), st.cdrain)
 
     st = st._replace(
@@ -466,6 +531,14 @@ def phase0_stage(cfg: EngineConfig, app: DiffusionApp, st: MachineState,
         stat_exec=st.stat_exec + jnp.sum(done0.astype(jnp.int32)),
         stat_allocs=st.stat_allocs + jnp.sum(alc_room.astype(jnp.int32)),
         stat_stall=st.stat_stall + jnp.sum(rotate.astype(jnp.int32)))
+    if QB > 1:
+        # per-query activity counters (repro.mq, DESIGN §10): a query
+        # slot that relaxed nowhere this cycle is one cycle closer to
+        # its own quiescence — the session layer diffs qchg across
+        # increments and reads qlast as the slot's settle cycle
+        dq = jnp.sum(changed_q.astype(jnp.int32), axis=(0, 1))
+        st = st._replace(qchg=st.qchg + dq,
+                         qlast=jnp.where(dq > 0, st.cycle, st.qlast))
     if cfg.faults is not None:
         st = st._replace(flt=st.flt.at[FLT_CORRUPT].add(
             jnp.sum(bad.astype(jnp.int32))))

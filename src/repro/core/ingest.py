@@ -15,7 +15,8 @@ import numpy as np
 from repro.core import rings
 from repro.core.alloc import rhizome_addr
 from repro.core.config import EngineConfig
-from repro.core.msg import OP_INSERT_EDGE, OP_REPAIR, make_msg, seal_msg
+from repro.core.msg import (OP_INSERT_EDGE, OP_REPAIR, make_msg, pad_msg,
+                            seal_msg)
 from repro.core.routing import (deliver, manhattan_hops, msg_lane,
                                 yx_target_buffer)
 from repro.core.state import MachineState, TM_IO, root_addr
@@ -95,6 +96,10 @@ def io_stage(cfg: EngineConfig, st: MachineState, rows, cols):
     best = jnp.argmin(dist + pref * half_diam, axis=1)
     tgt = jnp.take_along_axis(cand, best[:, None], axis=1)[:, 0]
     msg = make_msg(OP_INSERT_EDGE, tgt, root_addr(cfg, cur[:, 1]), cur[:, 2])
+    if cfg.qbatch > 1:
+        # insert-edge payload is (dst, weight) only — the query-axis
+        # extension words of a qbatch > 1 machine are dead here (§10)
+        msg = pad_msg(msg, cfg.msg_words)
     if cfg.faults is not None:
         # repair-injection sentinel (DESIGN §9): a stream row with a
         # NEGATIVE dst word is not an edge but a recovery relax —

@@ -11,6 +11,20 @@ A message is a fixed 5-word int32 record::
 Float arguments (application values, e.g. BFS levels) are bit-cast into
 int32 words -- the 256-bit AM-CCA flit carries opaque operand words the
 same way.
+
+Query batching (repro.mq, DESIGN §10) widens the record to
+``5 + (qbatch - 1)`` words.  The first five words keep their classic
+meaning — payload slot 0 stays in word 2 (arg0) and the integrity seal
+stays in word 4 — while payload slots ``1..qbatch-1`` occupy the
+extension words ``5..``.  For the app-like opcodes (``OP_APP``,
+``OP_REPAIR``, ``OP_RHIZOME_FWD``) word 3 becomes the **qsel** query-id
+bitmask: 0 means "all query slots live" (the common in-fabric case — a
+diffusion wave carries every tenant), bit ``q`` set restricts the relax
+to slot ``q`` (admission re-seeds inject ``qsel = 1 << q``; masked-out
+slots relax against their app's neutral element, a no-op).  ``OP_ALLOC``
+keeps its requester-value in word 3 and carries slots ``1..`` in the
+extension words so a ghost allocation seeds the whole vector.  With
+``qbatch == 1`` the layout is byte-identical to the pre-mq flit.
 """
 from __future__ import annotations
 
@@ -96,3 +110,53 @@ def seal_msg(m):
 
 
 EMPTY_MSG = (0, 0, 0, 0, 0)
+
+
+# ---------------- query-batched (vector payload) helpers (DESIGN §10) ----
+
+
+def msg_words(qbatch: int) -> int:
+    """Record width in int32 words for a query-batch of ``qbatch``."""
+    return MSG_WORDS + max(0, qbatch - 1)
+
+
+def pad_msg(m, n_words: int):
+    """Right-pad a classic 5-word message with zero extension words.
+
+    Used for the non-app opcodes (insert-edge, set-future, link-rhizome)
+    whose extension words are dead payload — every buffer in a
+    ``qbatch > 1`` machine is ``msg_words`` wide, so all records must
+    share the width.
+    """
+    if m.shape[-1] == n_words:
+        return m
+    pad = jnp.zeros(m.shape[:-1] + (n_words - m.shape[-1],), m.dtype)
+    return jnp.concatenate([m, pad], axis=-1)
+
+
+def msg_qvals(m, qbatch: int):
+    """The ``[..., qbatch]`` int32 payload vector of an app-like message:
+    word 2 is slot 0, the extension words are slots 1..  (bit-cast floats
+    — pair with :func:`i2f`)."""
+    if qbatch == 1:
+        return m[..., 2:3]
+    return jnp.concatenate([m[..., 2:3], m[..., MSG_WORDS:]], axis=-1)
+
+
+def make_qmsg(op, dst, qbits, a1=0):
+    """Build an app-like message carrying the full ``[..., Q]`` payload
+    vector ``qbits`` (int32 bit-cast values): slot 0 rides word 2, slots
+    1.. ride the extension words.  ``a1`` is the qsel bitmask (0 = all
+    slots live).  At ``Q == 1`` this is exactly :func:`make_msg`."""
+    head = make_msg(op, dst, qbits[..., 0], a1)
+    if qbits.shape[-1] == 1:
+        return head
+    return jnp.concatenate([head, qbits[..., 1:]], axis=-1)
+
+
+def qsel_mask(a1, qbatch: int):
+    """``[..., qbatch]`` bool: which query slots an app-like message
+    addresses.  ``a1 == 0`` (the in-fabric default) selects all slots;
+    otherwise bit ``q`` of ``a1`` selects slot ``q``."""
+    bits = (a1[..., None] >> jnp.arange(qbatch, dtype=jnp.int32)) & 1
+    return (a1[..., None] == 0) | (bits == 1)

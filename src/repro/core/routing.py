@@ -26,7 +26,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.config import EngineConfig
-from repro.core.msg import (DIR_E, DIR_N, DIR_S, DIR_W, MSG_WORDS, N_DIRS,
+from repro.core.msg import (DIR_E, DIR_N, DIR_S, DIR_W, N_DIRS,
                             OP_ALLOC, OP_LINK_RHIZOME, OP_RHIZOME_FWD,
                             OP_SET_FUTURE, TB_AQ_SELF, TB_CHAN_E, TB_CHAN_N,
                             TB_CHAN_S, TB_CHAN_W)
@@ -151,8 +151,10 @@ def deliver(cfg: EngineConfig, aq, aq_n, aq_head, ch, ch_n, ch_head,
     ok_all = ok_aq
     L, LC = cfg.lanes, cfg.lane_capacity
     oh_lane = rings._iota(L) == lane[..., None]                # [*B, L]
+    # width-polymorphic over the record length (cfg.msg_words: 5 classic
+    # words + qbatch-1 payload extension words, DESIGN §10)
     msg_l = jnp.broadcast_to(msg[..., None, :],
-                             msg.shape[:-1] + (L, MSG_WORDS))
+                             msg.shape[:-1] + (L, msg.shape[-1]))
     for d in range(N_DIRS):
         ok = ((want & (tb == d))[..., None] & oh_lane
               & rings.ring_free(ch_n[..., d, :], LC))          # [*B, L]

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import EngineConfig
-from repro.core.msg import MSG_WORDS, N_DIRS
+from repro.core.msg import N_DIRS
 
 # ghost-future states (paper Fig. 4)
 G_NULL, G_PENDING, G_SET = 0, 1, 2
@@ -128,17 +128,40 @@ class MachineState(NamedTuple):
     #     Pallas megakernel carries the leaf through its generic
     #     flattening with zero kernel changes ---
     flt: jax.Array
+    # --- per-query quiescence counters (repro.mq, DESIGN §10): when
+    #     cfg.qbatch > 1, qchg[q] counts relax changes of query slot q
+    #     (reset per increment with the stat_* scalars) and qlast[q]
+    #     holds the machine cycle of slot q's last change — the per-slot
+    #     changed-bits folded into the stat record that mq/session.py
+    #     reads for per-query time-to-quiescence and slot retirement.
+    #     [1] dummies (never touched) when qbatch == 1 ---
+    qchg: jax.Array        # [Q] i32 (or [1] dummy)
+    qlast: jax.Array       # [Q] i32 (or [1] dummy)
 
 
-def init_state(cfg: EngineConfig, init_vals: float | np.ndarray = 1e9) -> MachineState:
-    """Fresh machine: all vertices allocated as roots, no edges, empty queues."""
+def init_state(cfg: EngineConfig,
+               init_vals: float | np.ndarray = 1e9,
+               fwd_init: float | np.ndarray = 1e9) -> MachineState:
+    """Fresh machine: all vertices allocated as roots, no edges, empty queues.
+
+    ``init_vals`` may be a ``[n_vals]`` vector (per-query init values when
+    ``cfg.qbatch > 1``); ``fwd_init`` is the neutral element of the
+    coalescing forward register (``app.fwd_neutral`` — 1e9 for the
+    min-monotone apps), likewise scalar or per-query.
+    """
     cfg.validate()
     H, W, S, E = cfg.height, cfg.width, cfg.slots, cfg.edge_cap
     VN, FQ, Q = cfg.n_vals, cfg.futq_cap, cfg.queue_cap
     VL, LC = cfg.lanes, cfg.lane_capacity
     IO, L = cfg.io_cells, cfg.io_stream_cap
+    QB, WM = cfg.qbatch, cfg.msg_words
     z32 = lambda *s: jnp.zeros(s, jnp.int32)
     vals = jnp.full((H, W, S, VN), jnp.float32(init_vals))
+    # qbatch > 1 widens the emission snapshot and the forward register
+    # with the query axis (DESIGN §10); qbatch == 1 keeps the classic
+    # scalar shapes so the pre-mq trace is unchanged
+    fwd_shape = (H, W, S) if QB == 1 else (H, W, S, QB)
+    cemit_shape = (H, W) if QB == 1 else (H, W, QB)
     return MachineState(
         vals=vals,
         nedges=z32(H, W, S),
@@ -151,19 +174,19 @@ def init_state(cfg: EngineConfig, init_vals: float | np.ndarray = 1e9) -> Machin
         nfree=jnp.full((H, W), cfg.primary_slots, jnp.int32),
         fq=z32(H, W, S, FQ, 3),
         fq_n=z32(H, W, S), fq_head=z32(H, W, S),
-        fwd_val=jnp.full((H, W, S), INF),
+        fwd_val=jnp.full(fwd_shape, jnp.float32(fwd_init)),
         fwd_pending=jnp.zeros((H, W, S), bool),
-        aq=z32(H, W, Q, MSG_WORDS), aq_n=z32(H, W), aq_head=z32(H, W),
-        ch=z32(H, W, N_DIRS, VL, LC, MSG_WORDS),
+        aq=z32(H, W, Q, WM), aq_n=z32(H, W), aq_head=z32(H, W),
+        ch=z32(H, W, N_DIRS, VL, LC, WM),
         ch_n=z32(H, W, N_DIRS, VL), ch_head=z32(H, W, N_DIRS, VL),
         ch_rr=z32(H, W, N_DIRS),
-        pk=z32(H, W, cfg.park_capacity, MSG_WORDS),
+        pk=z32(H, W, cfg.park_capacity, WM),
         pk_n=z32(H, W), pk_head=z32(H, W),
-        cmsg=z32(H, W, MSG_WORDS),
+        cmsg=z32(H, W, WM),
         cvalid=jnp.zeros((H, W), bool),
         cphase=z32(H, W), cT=z32(H, W),
-        cemit=jnp.zeros((H, W), jnp.float32),
-        cout=z32(H, W, MSG_WORDS),
+        cemit=jnp.zeros(cemit_shape, jnp.float32),
+        cout=z32(H, W, WM),
         cdrain=z32(H, W),
         io_edges=z32(IO, L, 3), io_n=z32(IO), io_pos=z32(IO),
         arot=z32(H, W),
@@ -174,6 +197,8 @@ def init_state(cfg: EngineConfig, init_vals: float | np.ndarray = 1e9) -> Machin
                       else (1, 1, 1, 1)), N_TM_LANE),
         tm_hiw=z32(*((H, W) if cfg.telemetry else (1, 1)), N_TM_HIW),
         flt=z32(4 if cfg.faults is not None else 1),
+        qchg=z32(QB if QB > 1 else 1),
+        qlast=z32(QB if QB > 1 else 1),
     )
 
 

@@ -20,7 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import LMBatchSpec, lm_batch
-from repro.models.transformer import LMConfig, init_lm_params, lm_loss
+from repro.dist.pipeline import pipelined_apply, split_stages
+from repro.models.common import rms_norm
+from repro.models.transformer import (LMConfig, _layer, init_lm_params,
+                                      lm_loss, wcast)
 from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
 from repro.optim.compression import (compress_with_feedback, decompress,
                                      init_residuals)
@@ -35,14 +38,70 @@ PRESETS = {
     "lm_tiny": LMConfig(name="lm_tiny", n_layers=2, d_model=128, n_heads=4,
                         n_kv_heads=2, d_ff=256, vocab=512, remat=False,
                         attn_chunk=64),
+    # pipeline-parallel preset: 4 layers split into --pipeline-stages
+    # contiguous stages (GPipe microbatch schedule, repro.dist.pipeline)
+    "lm_pipe": LMConfig(name="lm_pipe", n_layers=4, d_model=128, n_heads=4,
+                        n_kv_heads=2, d_ff=256, vocab=512, remat=False,
+                        attn_chunk=64),
 }
 
 
-def make_train_step(cfg: LMConfig, opt_cfg: AdamWConfig, compress: bool):
+def make_pipeline_loss(cfg: LMConfig, n_stages: int, mesh=None,
+                       n_micro: int | None = None):
+    """LM loss with the layer stack run through ``pipelined_apply``.
+
+    The transformer's parameters are already layer-stacked (the forward
+    is a ``lax.scan`` over them), so ``split_stages`` carves them into S
+    contiguous stages directly and each stage scans its own [L/S, ...]
+    slice.  The batch axis supplies the microbatches.  With ``mesh``
+    None (or no 'pipe' axis) ``pipelined_apply`` runs its sequential
+    fallback, so the same loss traces on one host.
+    """
+    if cfg.n_experts:
+        raise ValueError("pipeline loss supports dense FFN presets only "
+                         "(MoE aux loss is not threaded through stages)")
+    M = n_micro or n_stages
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        if B % M:
+            raise ValueError(f"batch {B} not divisible into {M} microbatches")
+        mb = B // M
+        positions = jnp.broadcast_to(jnp.arange(T)[None, :], (mb, T))
+        x = wcast(params["embed"], cfg, "model", None)[tokens]
+        xs = x.reshape(M, mb, T, x.shape[-1])
+        stages = split_stages(params["layers"], n_stages)
+
+        def stage_fn(sp, h):
+            def body(h, lp):
+                h2, _, _ = _layer(cfg, lp, h, positions)
+                return h2, None
+            h, _ = jax.lax.scan(body, h, sp)
+            return h
+
+        x = pipelined_apply(stage_fn, stages, xs, mesh)
+        x = rms_norm(x.reshape(B, T, x.shape[-1]), params["final_norm"])
+        logits = x @ wcast(params["unembed"], cfg, "dp", None)
+        tgt = jnp.take_along_axis(logits, batch["targets"][..., None],
+                                  -1)[..., 0].astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        return (lse - tgt).mean()
+
+    return loss_fn
+
+
+def make_train_step(cfg: LMConfig, opt_cfg: AdamWConfig, compress: bool,
+                    pipeline_stages: int = 0, mesh=None,
+                    n_micro: int | None = None):
+    loss_fn = (make_pipeline_loss(cfg, pipeline_stages, mesh, n_micro)
+               if pipeline_stages > 1
+               else functools.partial(lm_loss, cfg))
+
     @jax.jit
     def step(params, opt, residuals, batch):
         loss, grads = jax.value_and_grad(
-            lambda p: lm_loss(cfg, p, batch))(params)
+            lambda p: loss_fn(p, batch))(params)
         if compress:
             # inter-pod gradient path: int8 + error feedback
             comp, residuals = compress_with_feedback(grads, residuals)
@@ -54,8 +113,19 @@ def make_train_step(cfg: LMConfig, opt_cfg: AdamWConfig, compress: bool):
 
 def train(cfg: LMConfig, steps: int, batch: int, seq: int,
           ckpt_dir: str | None, ckpt_every: int = 50, compress: bool = False,
-          watchdog_s: float = 0.0, log_every: int = 10, seed: int = 0):
+          watchdog_s: float = 0.0, log_every: int = 10, seed: int = 0,
+          pipeline_stages: int = 0, n_micro: int | None = None):
     opt_cfg = AdamWConfig(total_steps=steps)
+    mesh = None
+    if pipeline_stages > 1 and len(jax.devices()) >= pipeline_stages:
+        # enough devices: real GPipe schedule over a 'pipe' mesh axis;
+        # otherwise make_pipeline_loss runs the sequential fallback
+        mesh = jax.make_mesh((pipeline_stages,), ("pipe",))
+        print(f"[train] pipeline: {pipeline_stages} stages over "
+              f"{len(mesh.devices.flat)} devices")
+    elif pipeline_stages > 1:
+        print(f"[train] pipeline: {pipeline_stages} stages, sequential "
+              f"fallback ({len(jax.devices())} device(s))")
     params = init_lm_params(cfg, jax.random.PRNGKey(seed))
     opt = init_adamw(params)
     residuals = init_residuals(params) if compress else \
@@ -67,7 +137,8 @@ def train(cfg: LMConfig, steps: int, batch: int, seq: int,
         (params, opt, residuals), extra, start = ck.restore(
             (params, opt, residuals))
         print(f"[train] resumed from step {start} ({extra})")
-    step_fn = make_train_step(cfg, opt_cfg, compress)
+    step_fn = make_train_step(cfg, opt_cfg, compress,
+                              pipeline_stages, mesh, n_micro)
     wd = StepWatchdog(watchdog_s) if watchdog_s > 0 else None
     losses = []
     t0 = time.time()
@@ -104,11 +175,19 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compress", action="store_true")
     ap.add_argument("--watchdog-s", type=float, default=0.0)
+    ap.add_argument("--pipeline-stages", type=int, default=0,
+                    help="split the layer stack into N pipeline stages "
+                         "(GPipe microbatch schedule; 0/1 = off)")
+    ap.add_argument("--micro", type=int, default=None,
+                    help="microbatch count for the pipeline schedule "
+                         "(default: one per stage)")
     args = ap.parse_args()
     cfg = PRESETS[args.preset]
     _, losses = train(cfg, args.steps, args.batch, args.seq,
                       args.ckpt_dir, args.ckpt_every, args.compress,
-                      args.watchdog_s)
+                      args.watchdog_s,
+                      pipeline_stages=args.pipeline_stages,
+                      n_micro=args.micro)
     print(f"[train] done. first loss {losses[0]:.4f} -> "
           f"last {losses[-1]:.4f}")
 

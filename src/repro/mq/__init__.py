@@ -1,0 +1,16 @@
+"""repro.mq — multi-tenant query serving over one evolving graph.
+
+Q-batched diffusion (DESIGN §10): the vertex value slot carries one value
+per concurrent query, app-like messages widen to vector payloads, and one
+relaxation wave over the live structure serves every tenant at once.
+
+  batch_app   build the composite :class:`DiffusionApp` over Q slot apps
+  MQSession   the serving engine: admit / run / read back / retire queries
+  FrontDesk   admission control + per-query latency accounting
+"""
+from repro.mq.app import batch_app
+from repro.mq.frontdesk import FrontDesk, QueryRequest
+from repro.mq.session import MQSession, QuerySlot
+
+__all__ = ["batch_app", "MQSession", "QuerySlot", "FrontDesk",
+           "QueryRequest"]

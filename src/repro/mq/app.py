@@ -1,0 +1,92 @@
+"""Composite query-batched apps (repro.mq, DESIGN §10).
+
+``batch_app`` lifts Q per-slot scalar :class:`DiffusionApp`s into one
+composite app whose relax / edge_value / forward-merge act on the whole
+``[..., Q]`` value vector.  Each slot keeps its own monotone frame (its
+relax direction, edge semiring and neutral element), so a mixed
+BFS + SSSP + CC + widest batch rides one diffusion wave: a message that
+reaches a vertex relaxes every tenant's slot at once, and slots for which
+the payload is the neutral element simply no-op (over-propagation is
+sound under monotone relaxation).
+
+The composite stays a frozen dataclass with tuple-valued ``init_val`` /
+``fwd_neutral`` so it remains hashable — the engine passes the app as a
+jit static argument, and a new slot mix is just a recompile.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.apps import APPS, DiffusionApp
+
+
+def _stack_relax(slot_apps):
+    def relax(vals, incoming):
+        # vals, incoming: [..., Q] -> per-slot scalar relax, re-stacked
+        outs, chgs = [], []
+        for q, a in enumerate(slot_apps):
+            nv, ch = a.relax(vals[..., q:q + 1], incoming[..., q])
+            outs.append(nv)
+            chgs.append(ch)
+        return jnp.concatenate(outs, axis=-1), jnp.stack(chgs, axis=-1)
+    return relax
+
+
+def _stack_edge_value(slot_apps):
+    def edge_value(v, w):
+        # v: [..., Q] source emission, w: [...] edge weight (shared)
+        return jnp.stack([a.edge_value(v[..., q], w)
+                          for q, a in enumerate(slot_apps)], axis=-1)
+    return edge_value
+
+
+def _stack_propagate(slot_apps):
+    def propagate_on_insert(vals):
+        # an insert propagates if ANY tenant would propagate; the wave
+        # carries the full vector and no-ops on unreached slots
+        p = slot_apps[0].propagate_on_insert(vals[..., 0:1])
+        for q, a in enumerate(slot_apps[1:], start=1):
+            p = p | a.propagate_on_insert(vals[..., q:q + 1])
+        return p
+    return propagate_on_insert
+
+
+def _stack_fwd_merge(slot_apps):
+    def fwd_merge(fv, inc):
+        # per-slot meet of the deferred app-forward register (§4.4)
+        return jnp.stack([a.fwd_merge(fv[..., q], inc[..., q])
+                          for q, a in enumerate(slot_apps)], axis=-1)
+    return fwd_merge
+
+
+def batch_app(slot_apps, name: str | None = None) -> DiffusionApp:
+    """Compose Q per-slot apps into one qbatch=Q :class:`DiffusionApp`.
+
+    ``slot_apps``: sequence of app names (keys of ``core.apps.APPS``) or
+    :class:`DiffusionApp` instances, one per query slot.  Every slot app
+    must be a scalar app (``n_vals == 1``, ``qbatch == 1``).
+    """
+    apps = tuple(APPS[a] if isinstance(a, str) else a for a in slot_apps)
+    Q = len(apps)
+    assert Q >= 1, "batch_app needs at least one slot app"
+    for a in apps:
+        assert a.n_vals == 1 and a.qbatch == 1, \
+            f"slot app {a.name!r} must be a scalar app"
+    if Q == 1:
+        return apps[0]
+    # host-side root combine is per-slot (MQSession passes each slot's
+    # combine to engine.values); the composite default only covers
+    # whole-vector internal uses, which never mix directions
+    return DiffusionApp(
+        name=name or ("mq[" + ",".join(a.name for a in apps) + "]"),
+        relax=_stack_relax(apps),
+        edge_value=_stack_edge_value(apps),
+        propagate_on_insert=_stack_propagate(apps),
+        init_val=tuple(float(a.init_val) for a in apps),
+        n_vals=Q,
+        combine=apps[0].combine,
+        fwd_merge=_stack_fwd_merge(apps),
+        fwd_neutral=tuple(float(a.fwd_neutral) for a in apps),
+        qbatch=Q,
+        slot_apps=apps,
+    )

@@ -92,7 +92,8 @@ def migrate_state(new_cfg, app, snapshot: MachineState,
     """
     if strict:
         assert_boundary(snapshot)
-    fresh = init_state(new_cfg, init_vals=app.init_val)
+    fresh = init_state(new_cfg, init_vals=app.init_val,
+                       fwd_init=app.fwd_neutral)
     moved = {}
     for name in STORAGE_LEAVES:
         src = np.asarray(getattr(snapshot, name))
